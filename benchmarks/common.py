@@ -1,0 +1,128 @@
+"""Shared benchmark infrastructure: run policies on workloads, compute both
+full-trace metrics (energy for a fixed workload, as in Fig. 2) and
+sustained-phase metrics (steady-state imbalance, as in Table 1 — the paper
+measures an overloaded steady state, so ramp-up/drain-out are windowed
+out)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (
+    SimConfig,
+    SimTrace,
+    make_policy,
+    simulate,
+)
+from repro.core.workload import ArrivalInstance
+from repro.data import LONGBENCH_LIKE, WorkloadSpec, batched_rounds_instance
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def policy_for(name: str, spec: WorkloadSpec):
+    if name.startswith("bfio"):
+        return make_policy(name, p_new=spec.decode_p)
+    return make_policy(name)
+
+
+@dataclasses.dataclass
+class RunResult:
+    policy: str
+    wall_s: float
+    # full trace
+    steps: int
+    energy_mj: float
+    makespan_s: float
+    throughput: float
+    tpot: float
+    # sustained window
+    avg_imbalance: float
+    idle_frac: float
+    avg_power: float
+    trace: Optional[SimTrace] = None
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("trace")
+        return d
+
+
+def run_policy(
+    instance: ArrivalInstance,
+    policy_name: str,
+    spec: WorkloadSpec,
+    config: SimConfig,
+    keep_trace: bool = False,
+) -> RunResult:
+    pol = policy_for(policy_name, spec)
+    tr = SimTrace()
+    t0 = time.time()
+    m = simulate(instance, pol, config, trace=tr)
+    wall = time.time() - t0
+
+    # sustained window: steps where the wait queue is non-empty (overload)
+    waiting = np.asarray(tr.n_waiting)
+    imb = np.asarray(tr.imbalance)
+    idle = np.asarray(tr.idle_frac)
+    power = np.asarray(tr.avg_power)
+    sustained = waiting > 0
+    if sustained.sum() < 10:  # light load: use the middle 80 %
+        n = len(imb)
+        sustained = np.zeros(n, bool)
+        sustained[n // 10: 9 * n // 10] = True
+
+    return RunResult(
+        policy=pol.name,
+        wall_s=wall,
+        steps=m.steps,
+        energy_mj=m.energy_joules / 1e6,
+        makespan_s=m.makespan,
+        throughput=m.throughput,
+        tpot=m.tpot,
+        avg_imbalance=float(imb[sustained].mean()),
+        idle_frac=float(idle[sustained].mean()),
+        avg_power=float(power[sustained].mean()),
+        trace=tr if keep_trace else None,
+    )
+
+
+def standard_instance(G: int, B: int, n_rounds: float = 4.0,
+                      spec: WorkloadSpec = LONGBENCH_LIKE, seed: int = 0,
+                      poisson: bool = True, overload: float = 1.5):
+    """The Table-1 style workload (Section 6.1): Poisson arrivals at a rate
+    exceeding system capacity — the overloaded regime of Definition 1.
+    ``n_rounds`` scales the total request count (~n_rounds full refills of
+    the G*B slots)."""
+    if not poisson:
+        return batched_rounds_instance(spec, G=G, B=B, n_rounds=n_rounds,
+                                       seed=seed)
+    from repro.data import overload_rate, poisson_trace
+    n = int(G * B * n_rounds)
+    rate = overload_rate(spec, G, B, factor=overload)
+    return poisson_trace(spec, n_requests=n, rate=rate, seed=seed)
+
+
+def sim_config(G: int, B: int, poisson: bool = True, **kw) -> SimConfig:
+    return SimConfig(G=G, B=B, time_based_arrivals=poisson, **kw)
+
+
+def save_rows(name: str, rows: list[dict], meta: Optional[dict] = None):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"meta": meta or {}, "rows": rows}, f, indent=1)
+    return path
+
+
+def print_csv(name: str, rows: list[dict], cols: list[str]):
+    """The run.py contract: name,us_per_call,derived CSV lines."""
+    for r in rows:
+        derived = ";".join(f"{c}={r.get(c)}" for c in cols)
+        us = r.get("wall_s", 0.0) * 1e6
+        print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,46 @@
+"""Figures 4 & 9: effect of the lookahead horizon H.
+
+Paper: metrics improve rapidly 0 -> 40, then plateau (and decision cost
+grows); optimum around H=40."""
+from __future__ import annotations
+
+import argparse
+
+from repro.data import LONGBENCH_LIKE
+
+from .common import print_csv, run_policy, save_rows, sim_config, \
+    standard_instance
+
+QUICK = dict(G=32, B=24, n_rounds=4.0, hs=[0, 5, 10, 20, 40, 80])
+FULL = dict(G=128, B=72, n_rounds=3.0, hs=[0, 10, 20, 40, 60, 80, 100])
+
+
+def run(full: bool = False, seed: int = 1) -> list[dict]:
+    p = FULL if full else QUICK
+    inst = standard_instance(p["G"], p["B"], p["n_rounds"], seed=seed)
+    cfg = sim_config(p["G"], p["B"])
+    rows = []
+    for h in p["hs"]:
+        r = run_policy(inst, f"bfio_h{h}", LONGBENCH_LIKE, cfg)
+        row = r.row()
+        row["H"] = h
+        rows.append(row)
+        print(f"  H={h:3d}: imb={row['avg_imbalance']:.3e} "
+              f"thr={row['throughput']:.4e} tpot={row['tpot']:.4f} "
+              f"E={row['energy_mj']:.2f}MJ (router wall {row['wall_s']:.0f}s)",
+              flush=True)
+    save_rows("fig_hsweep_full" if full else "fig_hsweep", rows,
+              meta={k: v for k, v in p.items() if k != "hs"})
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_csv("fig_hsweep", rows, ["H", "avg_imbalance", "throughput",
+                                   "tpot", "energy_mj"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

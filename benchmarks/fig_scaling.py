@@ -1,0 +1,57 @@
+"""Figures 10 & 11: scalability with cluster size G.
+
+Paper: FCFS imbalance grows super-linearly in G while BF-IO stays bounded;
+BF-IO throughput scales near-linearly; the energy-reduction percentage
+grows monotonically with G (12 % at G=16 -> 30 % at G=224)."""
+from __future__ import annotations
+
+import argparse
+
+from repro.data import LONGBENCH_LIKE
+
+from .common import print_csv, run_policy, save_rows, sim_config, \
+    standard_instance
+
+QUICK = dict(Gs=[8, 16, 32, 64], B=24, n_rounds=4.0)
+FULL = dict(Gs=[16, 32, 64, 128, 224], B=72, n_rounds=3.0)
+
+
+def run(full: bool = False, seed: int = 2) -> list[dict]:
+    p = FULL if full else QUICK
+    rows = []
+    for G in p["Gs"]:
+        inst = standard_instance(G, p["B"], p["n_rounds"], seed=seed)
+        cfg = sim_config(G, p["B"])
+        r_f = run_policy(inst, "fcfs", LONGBENCH_LIKE, cfg)
+        r_b = run_policy(inst, "bfio_h40", LONGBENCH_LIKE, cfg)
+        row = {
+            "G": G, "B": p["B"],
+            "fcfs_imbalance": r_f.avg_imbalance,
+            "bfio_imbalance": r_b.avg_imbalance,
+            "iir": r_f.avg_imbalance / max(r_b.avg_imbalance, 1e-9),
+            "fcfs_throughput": r_f.throughput,
+            "bfio_throughput": r_b.throughput,
+            "fcfs_energy_mj": r_f.energy_mj,
+            "bfio_energy_mj": r_b.energy_mj,
+            "energy_reduction": 1 - r_b.energy_mj / r_f.energy_mj,
+            "wall_s": r_f.wall_s + r_b.wall_s,
+        }
+        rows.append(row)
+        print(f"  G={G:4d}: IIR={row['iir']:.2f} "
+              f"thr x{row['bfio_throughput']/row['fcfs_throughput']:.2f} "
+              f"dE={row['energy_reduction']:.1%}", flush=True)
+    save_rows("fig_scaling_full" if full else "fig_scaling", rows,
+              meta=dict(B=p["B"]))
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_csv("fig_scaling", rows, ["G", "iir", "energy_reduction",
+                                    "bfio_throughput", "fcfs_throughput"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

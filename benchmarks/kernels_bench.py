@@ -1,0 +1,114 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled TPU code), so wall-times compare the XLA
+reference paths and validate the cost MODEL: we report us/call of the jnp
+reference, the analytic FLOPs/bytes of the kernel, and the projected v5e
+time from the roofline constants."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.launch.roofline import V5E
+
+from .common import print_csv, save_rows
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def bench_decode_attention() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (B, Hq, Hkv, hd, L) in [(8, 32, 8, 128, 4096),
+                                (32, 32, 8, 128, 8192)]:
+        q = jnp.asarray(rng.normal(size=(B, Hq, hd)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(B, L, Hkv, hd)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(B, L, Hkv, hd)), jnp.bfloat16)
+        lens = jnp.full((B,), L, jnp.int32)
+        f = jax.jit(ref.decode_attention_ref)
+        t = _time(f, q, k, v, lens)
+        flops = 4 * B * Hq * hd * L
+        bytes_ = 2 * B * L * Hkv * hd * 2 * 2
+        t_v5e = max(flops / V5E.peak_flops, bytes_ / V5E.hbm_bw)
+        rows.append({"kernel": "decode_attention",
+                     "shape": f"B{B}_H{Hq}/{Hkv}_hd{hd}_L{L}",
+                     "wall_s": t, "flops": flops, "hbm_bytes": bytes_,
+                     "v5e_projected_us": t_v5e * 1e6,
+                     "bound": "memory" if bytes_ / V5E.hbm_bw
+                              > flops / V5E.peak_flops else "compute"})
+    return rows
+
+
+def bench_ssm_scan() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(1)
+    for (B, S, H, dk, dv) in [(8, 2048, 32, 64, 128)]:
+        q = jnp.asarray(rng.normal(size=(B, S, H, dk)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, dk)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, dv)), jnp.float32)
+        a = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))), jnp.float32)
+        g = jnp.asarray(np.abs(rng.normal(size=(B, S, H))), jnp.float32)
+        from repro.models.ssm import chunked_linear_attention
+        f = jax.jit(lambda *xs: chunked_linear_attention(*xs, chunk=128))
+        t = _time(f, q, k, v, a, g)
+        chunk = 128
+        flops = B * S * H * (2 * chunk * dk + 2 * chunk * dv
+                             + 4 * dk * dv)
+        bytes_ = B * S * H * (2 * dk + dv) * 4 * 2
+        t_v5e = max(flops / V5E.peak_flops, bytes_ / V5E.hbm_bw)
+        rows.append({"kernel": "ssm_chunk_scan",
+                     "shape": f"B{B}_S{S}_H{H}_dk{dk}_dv{dv}",
+                     "wall_s": t, "flops": flops, "hbm_bytes": bytes_,
+                     "v5e_projected_us": t_v5e * 1e6,
+                     "bound": "memory" if bytes_ / V5E.hbm_bw
+                              > flops / V5E.peak_flops else "compute"})
+    return rows
+
+
+def bench_rms_norm() -> list[dict]:
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16384, 4096)), jnp.bfloat16)
+    s = jnp.ones((4096,), jnp.float32)
+    f = jax.jit(ref.rms_norm_ref)
+    t = _time(f, x, s)
+    bytes_ = x.size * 2 * 2
+    return [{"kernel": "rms_norm", "shape": "16384x4096", "wall_s": t,
+             "flops": 3 * x.size, "hbm_bytes": bytes_,
+             "v5e_projected_us": bytes_ / V5E.hbm_bw * 1e6,
+             "bound": "memory"}]
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = bench_decode_attention() + bench_ssm_scan() + bench_rms_norm()
+    for r in rows:
+        print(f"  {r['kernel']:>18s} {r['shape']:26s} cpu={r['wall_s']*1e3:8.1f}ms "
+              f"v5e~{r['v5e_projected_us']:8.1f}us ({r['bound']}-bound)",
+              flush=True)
+    save_rows("kernels_bench", rows)
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_csv("kernels", rows, ["kernel", "shape", "v5e_projected_us",
+                                "bound"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

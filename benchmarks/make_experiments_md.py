@@ -1,0 +1,148 @@
+"""Assemble EXPERIMENTS.md from the dry-run / roofline / benchmark
+artifacts.  Rerun after refreshing any artifact:
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import analyze_record
+
+HERE = os.path.dirname(__file__)
+DRY = os.path.join(HERE, "results", "dryrun")
+RES = os.path.join(HERE, "results")
+OUT = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(pattern):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DRY, pattern))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def _fmt_bytes(n):
+    return f"{n/2**30:.2f}"
+
+
+def dryrun_section(recs) -> str:
+    lines = [
+        "## §Dry-run — 10 architectures x 4 shapes x 2 meshes (80/80 OK)",
+        "",
+        "Every (arch x shape) lowers and compiles with `.lower().compile()`",
+        "for BOTH the single-pod 16x16 (256-chip) mesh and the multi-pod",
+        "2x16x16 (512-chip) mesh (the pod axis composes with data for batch",
+        "sharding; gradient all-reduce crosses pods).  Bytes are per-device.",
+        "",
+        "| arch | shape | mesh | ok | args GB | temp GB | collective GB | top collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(
+            recs.items(), key=lambda kv: (kv[0][0], SHAPE_ORDER.index(
+                kv[0][1]), kv[0][2])):
+        m = r.get("memory", {})
+        cc = r.get("collectives_corrected", {})
+        ops = cc.get("bytes_by_op", {})
+        top = ", ".join(f"{k}:{v/2**30:.1f}G" for k, v in sorted(
+            ops.items(), key=lambda kv: -kv[1])[:2])
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | "
+            f"{'OK' if r.get('ok') else 'FAIL'} | "
+            f"{_fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+            f"{_fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
+            f"{cc.get('total_bytes', 0)/2**30:.2f} | {top} |")
+    lines += [
+        "",
+        "Notes:",
+        "* `temp` comes from the **CPU** backend's buffer assignment.  The",
+        "  CPU emulates bf16 dots by converting operands to f32 and hoists",
+        "  those converts out of layer scans (whole stacked weight/cache",
+        "  copies in f32), so temp is a ~2-3x upper bound on the TPU",
+        "  number; `args` (weights + caches + optimizer state, exactly as",
+        "  sharded) is exact.  Fits were additionally verified by analytic",
+        "  residency accounting in §Roofline.",
+        "* decode shapes lower `serve_step` (1 token against a KV cache of",
+        "  seq_len); `long_500k` uses the rolling sliding-window variant",
+        "  for full-attention families and native state for ssm/hybrid",
+        "  (DESIGN.md §5).",
+        "* this table is the PRE-optimization baseline (hd-first sharding,",
+        "  grad_accum=8).  The shipped launcher defaults now include the",
+        "  §Perf iteration-1/2 fixes, so re-running `dryrun.py` produces",
+        "  better numbers for train/prefill; every optimized variant is a",
+        "  separate `*__opt*.json` artifact.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def roofline_section(recs) -> str:
+    lines = [
+        "## §Roofline — per (arch x shape), single-pod mesh, TPU v5e",
+        "",
+        "Terms (seconds/step): compute = analytic FLOPs / (256 x 197e12);",
+        "memory = analytic HBM bytes / (256 x 819e9); collective = per-chip",
+        "collective bytes (trip-count-corrected HLO parse) / 50e9.",
+        "`useful` = MODEL_FLOPS (6*N_active*D) / analytic total (remat &",
+        "attention overhead).  XLA `cost_analysis` counts scan bodies once,",
+        "so compute/memory use exact analytic accounting; collectives are",
+        "corrected by multiplying while-body collectives by loop trip",
+        "counts.",
+        "",
+        "| arch | shape | compute ms | memory ms | collective ms | dominant | useful | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for (arch, shape, mesh), r in recs.items():
+        if mesh != "single":
+            continue
+        a = analyze_record(r)
+        rows.append(a)
+    for a in sorted(rows, key=lambda a: (a["arch"],
+                                         SHAPE_ORDER.index(a["shape"]))):
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']*1e3:.2f} | "
+            f"{a['t_memory_s']*1e3:.2f} | {a['t_collective_s']*1e3:.1f} | "
+            f"{a['dominant']} | {a['useful_ratio']:.2f} | {a['tip'][:58]} |")
+    lines += [
+        "",
+        "Baseline observations (these select the hillclimb pairs in §Perf):",
+        "* Every pair is **collective-dominant at baseline** — the",
+        "  hd-sharded attention layout (forced by GQA kv_heads < 16 on most",
+        "  archs) inserts either per-tile score psums (prefill/train) or",
+        "  f32 weight re-gathers (decode, via the RoPE half-split).",
+        "* Worst absolute: qwen2-72b train_4k (313 s) and granite-34b",
+        "  prefill_32k (401 s).  Most paper-representative: qwen2-72b",
+        "  decode_32k (the serve_step the scheduler balances).",
+        "* MoE `useful` ratios are lowest (0.21-0.62): attention FLOPs over",
+        "  long caches dominate the small active-parameter compute — this",
+        "  is exactly the KV-dominated workload regime the paper's",
+        "  scheduler targets.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = _load("*__*__single.json")
+    recs.update(_load("*__*__multi.json"))
+    # exclude tagged (optimized) runs
+    recs = {k: v for k, v in recs.items()}
+
+    parts = [open(os.path.join(HERE, "experiments_header.md")).read(),
+             dryrun_section(recs),
+             roofline_section(recs),
+             open(os.path.join(HERE, "experiments_perf.md")).read(),
+             open(os.path.join(HERE, "experiments_validation.md")).read()]
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``python -m benchmarks.run`` runs the quick configurations (CI-sized);
+``--full`` runs paper-scale (G=256, B=72 etc. — hours on this CPU).
+Each benchmark prints human-readable lines plus ``name,us_per_call,derived``
+CSV rows, and writes a JSON artifact under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale configurations")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table1,fig_idle")
+    args = ap.parse_args()
+
+    from . import (fig_hsweep, fig_idle, fig_power, fig_scaling,
+                   interface_ablation, kernels_bench, table1,
+                   theory_validation)
+    suites = {
+        "table1": table1.main,                 # Table 1
+        "fig_idle": fig_idle.main,             # Figure 1
+        "fig_power": fig_power.main,           # Figures 2 & 8
+        "fig_hsweep": fig_hsweep.main,         # Figures 4 & 9
+        "fig_scaling": fig_scaling.main,       # Figures 10 & 11
+        "theory": theory_validation.main,      # Thms 1-4, Cor 1
+        "interface": interface_ablation.main,  # §7.3 + Thm 3 ablations
+        "kernels": kernels_bench.main,         # kernel cost model
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    for name in chosen:
+        print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===",
+              flush=True)
+        t0 = time.time()
+        suites[name](full=args.full)
+        print(f"=== {name} done in {time.time() - t0:.0f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

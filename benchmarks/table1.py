@@ -1,0 +1,68 @@
+"""Table 1: policy comparison on the LongBench-like workload.
+
+Paper numbers (G=256, B=72): BF-IO(H=40) vs FCFS -> imbalance /14.9,
+throughput +92 %, TPOT -44 %, energy -29 %.  ``--full`` runs the paper
+scale; the default is a reduced configuration for CI-speed runs (the
+qualitative ordering is scale-robust; gains grow ~ sqrt(B log G)).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.data import LONGBENCH_LIKE
+
+from .common import (
+    print_csv,
+    run_policy,
+    save_rows,
+    sim_config,
+    standard_instance,
+)
+
+QUICK = dict(G=32, B=24, n_rounds=5.0,
+             policies=["fcfs", "jsq", "rr", "pod2",
+                       "bfio_h0", "bfio_h20", "bfio_h40"])
+FULL = dict(G=256, B=72, n_rounds=3.0,
+            policies=["fcfs", "jsq", "bfio_h0", "bfio_h20", "bfio_h40",
+                      "bfio_h60", "bfio_h80", "bfio_h100"])
+
+
+def run(full: bool = False, seed: int = 0) -> list[dict]:
+    p = FULL if full else QUICK
+    inst = standard_instance(p["G"], p["B"], p["n_rounds"], seed=seed)
+    cfg = sim_config(p["G"], p["B"])
+    rows = []
+    base = None
+    for name in p["policies"]:
+        r = run_policy(inst, name, LONGBENCH_LIKE, cfg)
+        row = r.row()
+        if base is None:
+            base = row
+        row["imb_ratio_vs_fcfs"] = base["avg_imbalance"] / max(
+            row["avg_imbalance"], 1e-9)
+        row["thr_gain_vs_fcfs"] = row["throughput"] / base["throughput"] - 1
+        row["tpot_gain_vs_fcfs"] = 1 - row["tpot"] / base["tpot"]
+        row["energy_gain_vs_fcfs"] = 1 - row["energy_mj"] / base["energy_mj"]
+        rows.append(row)
+        print(f"  {row['policy']:>10s}: imb={row['avg_imbalance']:.3e} "
+              f"(x{row['imb_ratio_vs_fcfs']:.1f}) "
+              f"thr={row['throughput']:.3e} (+{row['thr_gain_vs_fcfs']:.0%}) "
+              f"tpot={row['tpot']:.3f}s (-{row['tpot_gain_vs_fcfs']:.0%}) "
+              f"E={row['energy_mj']:.2f}MJ (-{row['energy_gain_vs_fcfs']:.0%})",
+              flush=True)
+    save_rows("table1_full" if full else "table1", rows,
+              meta={k: v for k, v in p.items() if k != "policies"})
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_csv("table1", rows,
+              ["policy", "avg_imbalance", "throughput", "tpot", "energy_mj",
+               "imb_ratio_vs_fcfs", "energy_gain_vs_fcfs"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

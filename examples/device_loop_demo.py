@@ -1,0 +1,31 @@
+"""Device-side routed serving loop: the whole admit→decode→complete cycle
+(including the BF-IO assignment) under one jitted lax.scan — zero host
+round-trips between steps.
+
+    PYTHONPATH=src python examples/device_loop_demo.py
+"""
+import numpy as np
+
+from repro.serving import init_loop_state, make_device_serving_loop
+
+G, B, WAIT_CAP = 8, 8, 256
+rng = np.random.default_rng(0)
+
+# bimodal workload: a few heavy prompts among many light ones
+sizes = np.concatenate([rng.uniform(200, 300, 24), rng.uniform(5, 30, 104)])
+remaining = rng.integers(4, 24, len(sizes))
+
+run = make_device_serving_loop(G, B, WAIT_CAP)
+state = init_loop_state(G, B, sizes, remaining, WAIT_CAP)
+
+print(f"{len(sizes)} requests onto {G} workers x {B} slots, jitted loop:")
+for chunk in range(4):
+    state = run(state, 16)
+    active = int(state.slot_active.sum())
+    waiting = int((state.wait_prefill > 0).sum())
+    print(f"  after {int(state.tot_steps):3d} steps: active={active:3d} "
+          f"waiting={waiting:3d} "
+          f"cum-imbalance={float(state.tot_imbalance):9.1f}")
+assert int(state.slot_active.sum()) == 0
+print("all requests served on device — avg per-step imbalance "
+      f"{float(state.tot_imbalance)/int(state.tot_steps):.1f}")

@@ -1,0 +1,33 @@
+"""Quickstart: the BF-IO principle in 60 seconds.
+
+Simulates the paper's decode-stage serving system (Section 6) at reduced
+scale, comparing the default FCFS router against BF-IO, and prints the
+four paper metrics.  Runs on CPU in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import SimConfig, make_policy, simulate
+from repro.data import LONGBENCH_LIKE, overload_rate, poisson_trace
+
+G, B = 16, 24                       # 16 workers, 24 slots each
+
+rate = overload_rate(LONGBENCH_LIKE, G, B, factor=1.5)
+instance = poisson_trace(LONGBENCH_LIKE, n_requests=G * B * 4, rate=rate,
+                         seed=0)
+config = SimConfig(G=G, B=B, time_based_arrivals=True)
+
+print(f"{'policy':>10s} {'imbalance':>12s} {'tok/s':>10s} "
+      f"{'TPOT(s)':>9s} {'energy(MJ)':>11s} {'idle':>6s}")
+baseline = None
+for name in ["fcfs", "jsq", "bfio_h0", "bfio_h20"]:
+    policy = make_policy(name)
+    m = simulate(instance, policy, config)
+    print(f"{m.policy:>10s} {m.avg_imbalance:12.3e} {m.throughput:10.1f} "
+          f"{m.tpot:9.4f} {m.energy_joules/1e6:11.3f} "
+          f"{m.mean_idle_frac:6.1%}")
+    if baseline is None:
+        baseline = m
+print(f"\nBF-IO(H=20) vs FCFS: imbalance /"
+      f"{baseline.avg_imbalance / m.avg_imbalance:.1f}, "
+      f"throughput +{m.throughput / baseline.throughput - 1:.0%}, "
+      f"energy -{1 - m.energy_joules / baseline.energy_joules:.0%}")

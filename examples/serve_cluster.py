@@ -1,0 +1,60 @@
+"""End-to-end serving driver: a real (reduced) model served with batched
+requests through the BF-IO-routed multi-worker engine.
+
+Loads the granite-8b smoke variant, submits a heterogeneous batch of
+requests, and runs FCFS vs BF-IO through the full engine (prefill ->
+sticky placement -> barrier-stepped decode -> completion), verifying that
+generated tokens are identical while efficiency differs.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import make_policy
+from repro.launch.mesh import make_cpu_mesh
+from repro.models import init_params, split_params
+from repro.serving import EngineConfig, ServeRequest, ServingEngine
+
+cfg = get_smoke_config("granite-8b")
+params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
+mesh = make_cpu_mesh()
+
+
+def make_requests():
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(24):
+        # bimodal prompt lengths: the regime where routing matters
+        n = int(rng.integers(40, 60)) if i % 3 == 0 else int(
+            rng.integers(4, 12))
+        reqs.append(ServeRequest(
+            rid=i, tokens=rng.integers(1, cfg.vocab_size, size=n),
+            max_new_tokens=int(rng.integers(4, 12))))
+    return reqs
+
+
+results = {}
+for policy in ["fcfs", "bfio_h0"]:
+    engine = ServingEngine(
+        cfg, params,
+        EngineConfig(n_workers=2, slots_per_worker=4, max_seq_len=128),
+        make_policy(policy), mesh=mesh)
+    reqs = make_requests()
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run()
+    results[policy] = (stats, reqs)
+    print(f"{policy:>8s}: {stats['tokens']} tokens, "
+          f"{stats['steps']} steps, {stats['time_s']:.3f}s simulated, "
+          f"imbalance {stats['avg_imbalance']:.1f}, "
+          f"energy {stats['energy_j']:.1f} J")
+
+# placement invariance: outputs must not depend on the router
+gen_f = [r.generated for r in results["fcfs"][1]]
+gen_b = [r.generated for r in results["bfio_h0"][1]]
+assert gen_f == gen_b, "outputs must be identical across routers!"
+print("\nOK: identical generations; BF-IO changed only efficiency "
+      f"(imbalance /"
+      f"{results['fcfs'][0]['avg_imbalance'] / max(results['bfio_h0'][0]['avg_imbalance'], 1e-9):.1f})")

@@ -1,0 +1,107 @@
+"""The 4 assigned input shapes and ``input_specs()`` — ShapeDtypeStruct
+stand-ins for every model input (no device allocation; dry-run pattern).
+
+Decode shapes lower ``serve_step`` (ONE new token against a KV cache of
+``seq_len``), not ``train_step``.  ``long_500k`` requires sub-quadratic
+attention: native for ssm/hybrid; dense/moe/vlm/audio run it via the
+sliding-window variant (rolling KV buffer) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+__all__ = ["InputShape", "SHAPES", "get_shape", "input_specs",
+           "LONG_CONTEXT_WINDOW", "config_for_shape"]
+
+LONG_CONTEXT_WINDOW = 8192  # sliding window used for long_500k on
+                            # full-attention archs (beyond-paper variant)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-dependent config adjustments: long_500k switches full-attention
+    archs to the sliding-window variant (rolling KV)."""
+    if (shape.name == "long_500k" and cfg.family != "ssm"
+            and cfg.sliding_window == 0):
+        # hybrid zamba2's shared attention also needs a window at 500k?
+        # No: its KV is small (few shared-attn applications) — keep full
+        # attention for hybrid, window the pure full-attention families.
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            return dataclasses.replace(cfg,
+                                       sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.patch_tokens, cfg.d_model), dtype)
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's inputs.
+
+    train  -> {tokens, targets, mask (+frontend)}
+    prefill-> {tokens, lengths (+frontend)}
+    decode -> {tokens (B,), cache (pytree of specs)}
+    """
+    cfg = config_for_shape(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+        specs.update(_frontend_specs(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "lengths": jax.ShapeDtypeStruct((B,), i32),
+        }
+        specs.update(_frontend_specs(cfg, B))
+        return specs
+    if shape.kind == "decode":
+        from ..models.transformer import init_cache  # lazy: avoid cycle
+        cache = jax.eval_shape(
+            lambda: init_cache(cfg, B, S))
+        return {
+            "tokens": jax.ShapeDtypeStruct((B,), i32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,139 @@
+"""BF-IO as a composable, jittable JAX module.
+
+The host-side reference solver lives in ``io_solver``; this module provides
+a pure-``jax.lax`` implementation with static shapes so the balance step can
+be fused into a device-side serving loop (or dispatched per-step without
+host round-trips).  Construction is greedy LPT (a ``fori_loop`` over
+candidates in size order); refinement is a fixed number of best-improving
+pairwise swap iterations (the exchange argument of the proofs, vectorized
+over all candidate pairs with a top-3 exclusion trick).
+
+Shapes (static under jit):
+    base  : (G, W) f32   predicted resident-load trajectories, W = H+1
+    caps  : (G,)  i32    free slots per worker
+    cands : (N, W) f32   candidate contribution trajectories (zero-padded)
+    valid : (N,)  bool   which candidate rows are real
+Returns
+    assign: (N,) i32     worker id per candidate, -1 = not admitted
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bfio_assign", "windowed_imbalance"]
+
+
+def windowed_imbalance(loads: jnp.ndarray) -> jnp.ndarray:
+    """J = sum_h (G * max_g loads[g,h] - sum_g loads[g,h])."""
+    G = loads.shape[0]
+    return jnp.sum(G * loads.max(axis=0) - loads.sum(axis=0))
+
+
+def _greedy(base, caps, cands, valid, n_admit):
+    G, W = base.shape
+    N = cands.shape[0]
+    totals = jnp.where(valid, cands.sum(axis=1), -jnp.inf)
+    order = jnp.argsort(-totals)  # largest first, invalid last
+
+    def body(t, carry):
+        loads, caps_left, assign, admitted = carry
+        i = order[t]
+        c = cands[i]
+        # top-2 per step-of-window for the exclusion trick
+        top1 = loads.max(axis=0)
+        arg1 = loads.argmax(axis=0)
+        masked = jnp.where(
+            jnp.arange(G)[:, None] == arg1[None, :], -jnp.inf, loads)
+        top2 = masked.max(axis=0)
+        excl = jnp.where(jnp.arange(G)[:, None] == arg1[None, :],
+                         top2[None, :], top1[None, :])           # (G, W)
+        scores = jnp.maximum(excl, loads + c[None, :]).sum(axis=1)
+        scores = jnp.where(caps_left > 0, scores, jnp.inf)
+        g = jnp.argmin(scores)
+        ok = (valid[i] & (admitted < n_admit)
+              & jnp.isfinite(scores[g]))
+        loads = loads.at[g].add(jnp.where(ok, c, 0.0))
+        caps_left = caps_left.at[g].add(jnp.where(ok, -1, 0))
+        assign = assign.at[i].set(jnp.where(ok, g, -1))
+        admitted = admitted + jnp.where(ok, 1, 0)
+        return loads, caps_left, assign, admitted
+
+    init = (base.astype(jnp.float32), caps.astype(jnp.int32),
+            jnp.full((N,), -1, dtype=jnp.int32), jnp.int32(0))
+    loads, caps_left, assign, _ = jax.lax.fori_loop(0, N, body, init)
+    return loads, caps_left, assign
+
+
+def _swap_once(loads, cands, assign, valid):
+    """One best-improving pairwise swap over all admitted candidate pairs."""
+    G, W = loads.shape
+    N = cands.shape[0]
+    admitted = (assign >= 0) & valid
+    # top-3 per window position, for max-excluding-two-rows
+    idx = jnp.argsort(-loads, axis=0)            # (G, W)
+    t1, t2, t3 = idx[0], idx[1], idx[jnp.minimum(2, G - 1)]
+    v1 = jnp.take_along_axis(loads, t1[None, :], axis=0)[0]
+    v2 = jnp.take_along_axis(loads, t2[None, :], axis=0)[0]
+    v3 = jnp.take_along_axis(loads, t3[None, :], axis=0)[0]
+
+    gi = assign                                   # (N,)
+    lo_i = jnp.where(admitted[:, None], loads[jnp.clip(gi, 0)], 0.0)  # (N, W)
+
+    def excl2(ga, gb):
+        # max over workers excluding rows ga, gb; ga/gb: (..., ) ints
+        # pick from top-3 per window position
+        e1 = (t1[None, None, :] != ga[..., None]) & \
+             (t1[None, None, :] != gb[..., None])
+        e2 = (t2[None, None, :] != ga[..., None]) & \
+             (t2[None, None, :] != gb[..., None])
+        out = jnp.where(e1, v1[None, None, :],
+                        jnp.where(e2, v2[None, None, :], v3[None, None, :]))
+        return out
+
+    ga = jnp.broadcast_to(gi[:, None], (N, N))
+    gb = jnp.broadcast_to(gi[None, :], (N, N))
+    diff = cands[None, :, :] - cands[:, None, :]   # c_j - c_i, (N, N, W)
+    la_new = lo_i[:, None, :] + diff               # row of g_i after swap
+    lb_new = lo_i[None, :, :] - diff               # row of g_j after swap
+    mx = jnp.maximum(excl2(ga, gb), jnp.maximum(la_new, lb_new))
+    # windowed sum of maxima after the swap (sum term is invariant)
+    val = mx.sum(axis=2)                           # (N, N)
+    feasible = (admitted[:, None] & admitted[None, :]
+                & (ga != gb))
+    cur = loads.max(axis=0).sum()
+    val = jnp.where(feasible, val, jnp.inf)
+    flat = jnp.argmin(val)
+    bi, bj = jnp.unravel_index(flat, val.shape)
+    improve = val[bi, bj] < cur - 1e-6
+
+    def apply(args):
+        loads, assign = args
+        ci, cj = cands[bi], cands[bj]
+        gi_, gj_ = assign[bi], assign[bj]
+        loads = loads.at[gi_].add(cj - ci)
+        loads = loads.at[gj_].add(ci - cj)
+        assign = assign.at[bi].set(gj_)
+        assign = assign.at[bj].set(gi_)
+        return loads, assign
+
+    loads, assign = jax.lax.cond(improve, apply, lambda a: a, (loads, assign))
+    return loads, assign, improve
+
+
+@functools.partial(jax.jit, static_argnames=("swap_iters",))
+def bfio_assign(base, caps, cands, valid, n_admit, swap_iters: int = 8):
+    """Jitted BF-IO assignment (greedy + fixed-budget swap refinement)."""
+    base = jnp.asarray(base, dtype=jnp.float32)
+    cands = jnp.asarray(cands, dtype=jnp.float32)
+    loads, caps_left, assign = _greedy(base, caps, cands, valid, n_admit)
+
+    def body(_, carry):
+        loads, assign = carry
+        loads, assign, _ = _swap_once(loads, cands, assign, valid)
+        return loads, assign
+
+    loads, assign = jax.lax.fori_loop(0, swap_iters, body, (loads, assign))
+    return assign

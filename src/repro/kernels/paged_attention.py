@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: paged one-token decode attention.
+
+Same online-softmax structure as decode_attention.py, but the KV blocks
+are fetched *indirectly* through a per-request block table (vLLM paging):
+the block table arrives via scalar prefetch (SMEM) and drives the
+BlockSpec index_map, so each grid step DMAs exactly one physical KV block
+HBM->VMEM — no contiguous-cache materialization, no gather of the pool.
+
+This is the TPU adaptation of paged attention: the GPU version does
+per-warp pointer chasing; on TPU the indirection moves into the prefetch
+-> index_map path and the MXU still sees dense (block, hd) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_size: int, n_blocks: int):
+    b = pl.program_id(0)
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (Gq, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (block, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+    scale = jax.lax.rsqrt(jnp.asarray(hd, jnp.float32))
+
+    s = jnp.dot(q * scale, k.T,
+                preferred_element_type=jnp.float32)  # (Gq, block)
+    length = lengths_ref[b]
+    pos = blk * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid_block = tables_ref[b, blk] >= 0
+    s = jnp.where((pos < length) & valid_block, s, _NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(blk == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def paged_decode_attention_pallas(q, k_pool, v_pool, block_tables, lengths,
+                                  *, block_size: int,
+                                  interpret: bool = True):
+    """q: (B, Hq, hd); k_pool/v_pool: (n_pool_blocks, block, Hkv, hd);
+    block_tables: (B, max_blocks) int32 (-1 = unallocated);
+    lengths: (B,).  Returns (B, Hq, hd).
+
+    Grid = (B, Hkv, max_blocks); the block-table scalar prefetch drives
+    the k/v index_map, fetching physical block ``tables[b, blk]``.
+    """
+    B, Hq, hd = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    max_blocks = block_tables.shape[1]
+    qg = q.reshape(B, Hkv, G, hd)
+    # clamp -1 entries for the DMA (they are masked in-kernel)
+    tables = jnp.maximum(block_tables.astype(jnp.int32), 0)
+
+    grid = (B, Hkv, max_blocks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_size=block_size,
+                          n_blocks=max_blocks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, l, T_, L_: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_size, 1, hd),
+                             lambda b, h, l, T_, L_: (T_[b, l], 0, h, 0)),
+                pl.BlockSpec((1, block_size, 1, hd),
+                             lambda b, h, l, T_, L_: (T_[b, l], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, h, l, T_, L_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lengths.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references).
+
+Each function mirrors a kernel in this package with the same signature and
+semantics; tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref", "ssm_chunk_scan_ref", "rms_norm_ref"]
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """One-token GQA decode attention.
+
+    q: (B, Hq, hd); k_cache/v_cache: (B, L, Hkv, hd); lengths: (B,).
+    Returns (B, Hq, hd).  fp32 softmax accumulation.
+    """
+    b, hq, hd = q.shape
+    L, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    qf = qf / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bhgd,blhd->bhgl", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(L)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+def ssm_chunk_scan_ref(q, k, v, log_decay, gate):
+    """Gated linear-attention recurrence (sequential reference).
+
+    q, k: (B, S, H, dk); v: (B, S, H, dv); log_decay/gate: (B, S, H).
+    Returns (y (B, S, H, dv), final_state (B, H, dk, dv)).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    af = log_decay.astype(jnp.float32)
+    gf = gate.astype(jnp.float32)
+
+    def step(state, t):
+        a = jnp.exp(af[:, t])[..., None, None]
+        u = jnp.einsum("bhk,bhv,bh->bhkv", kf[:, t], vf[:, t], gf[:, t])
+        state = a * state + u
+        y = jnp.einsum("bhk,bhkv->bhv", qf[:, t], state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), state
+
+
+def rms_norm_ref(x, scale, eps: float = 1e-5):
+    """RMS norm over the last dim, fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

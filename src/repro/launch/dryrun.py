@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  512 host devices let jax.make_mesh build the production meshes.
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape
+x mesh) combination, proving the distribution config is coherent without
+real hardware.
+
+Per pair it lowers the right step function (train_step / prefill_step /
+serve_step) with ShapeDtypeStruct inputs (no allocation), compiles for the
+host backend, and records memory_analysis / cost_analysis / collective
+byte counts (parsed from the optimized HLO) to a JSON artifact consumed by
+the roofline analysis (repro.launch.roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import (
+    SHAPES,
+    config_for_shape,
+    get_config,
+    get_shape,
+    input_specs,
+    list_archs,
+)
+from ..models import decode_fn, init_params, loss_fn, prefill_fn, split_params
+from ..training.optimizer import AdamWConfig, init_opt_state
+from ..training.train_loop import make_train_step
+from .mesh import (
+    activation_spec,
+    batch_axes_for,
+    batch_shardings,
+    cache_shardings,
+    make_production_mesh,
+    param_shardings,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+# HLO collective ops whose operand bytes constitute the collective roofline
+# term (Section ROOFLINE of the spec).
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b", re.M)
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for t, dims in _SHAPE_RE.findall(shape_str):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _BYTES.get(t, 4)
+        totals[op] = totals.get(op, 0) + nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_op": totals, "counts_by_op": counts,
+            "total_bytes": sum(totals.values()),
+            "total_count": sum(counts.values())}
+
+
+def _opt_sharding_tree(opt_shapes, pshard, mesh):
+    rep = NamedSharding(mesh, P())
+    return type(opt_shapes)(step=rep, m=pshard, v=pshard)
+
+
+def build_lowered(arch: str, shape_name: str, mesh, decode_opt: bool = False):
+    """Lower the step function for one (arch, shape) on the given mesh.
+
+    ``decode_opt``: length-sharded KV cache + heads-first weights +
+    distributed flash-decode (perf-optimized serve_step)."""
+    shape = get_shape(shape_name)
+    cfg = config_for_shape(get_config(arch), shape)
+    baxes = batch_axes_for(mesh, shape.global_batch)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = dataclasses.replace(cfg, dtype="float32")  # master weights
+        specs = input_specs(tcfg, shape)
+        ptree = jax.eval_shape(lambda: init_params(tcfg,
+                                                   jax.random.PRNGKey(0)))
+        pshapes, axes = split_params(ptree)
+        pshard = param_shardings(axes, tcfg, mesh, mode="train")
+        opt_shapes = jax.eval_shape(init_opt_state, pshapes)
+        oshard = _opt_sharding_tree(opt_shapes, pshard, mesh)
+        bshard = batch_shardings(specs, mesh, shape.global_batch)
+        act = activation_spec(tcfg, mesh, shape.global_batch)
+        # microbatching: keep peak activations bounded on 16 GB chips
+        npar = cfg.n_params()
+        # perf iteration (qwen2-72b train): FSDP regathers weights every
+        # microbatch, so fewer/larger microbatches cut collective traffic
+        # linearly while activation memory (bounded by remat + sharded
+        # stash) still fits: accum 8->4 confirmed -2x all-gather bytes.
+        grad_accum = 4 if npar > 4e9 else (2 if npar > 1e9 else 1)
+        step = make_train_step(tcfg, AdamWConfig(), mesh=mesh,
+                               batch_axes=baxes, act_spec=act,
+                               grad_accum=grad_accum,
+                               grad_shardings=pshard)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(NamedSharding(mesh, P()), pshard,
+                                    oshard),
+                     donate_argnums=(0, 1))
+        with jax.set_mesh(mesh):
+            return fn.lower(pshapes, opt_shapes, specs), cfg
+
+    # serving paths: bf16 params, serve-mode sharding
+    ptree = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pshapes, axes = split_params(ptree)
+    pshard = param_shardings(axes, cfg, mesh, mode="serve")
+
+    if shape.kind == "prefill":
+        # PD disaggregation (the paper's own serving architecture): prefill
+        # workers are distinct from decode workers, so they may use the
+        # heads-first sharding (no per-tile score psums); only decode
+        # workers need the cache-shardable hd-first layout.
+        pshard = param_shardings(axes, cfg, mesh, mode="prefill")
+        bshard = batch_shardings(specs, mesh, shape.global_batch)
+        # prefill is forward-only: no residual stash to bound, so keep the
+        # residual replicated on the model axis — d-sharding it only buys
+        # per-layer gather/scatter traffic (perf iteration 2)
+        act = NamedSharding(mesh, P(baxes if baxes else None, None, None))
+
+        def prefill_step(params, batch):
+            return prefill_fn(cfg, params, batch,
+                              max_len=shape.seq_len, mesh=mesh,
+                              batch_axes=baxes, act_spec=act)
+
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
+        with jax.set_mesh(mesh):
+            return fn.lower(pshapes, specs), cfg
+
+    # decode
+    M = int(mesh.shape.get("model", 1))
+    use_len = (decode_opt and not cfg.sliding_window
+               and shape.seq_len % max(M, 1) == 0 and M > 1
+               and cfg.n_heads % M == 0)
+    kv_shard = "length" if use_len else "heads"
+    if use_len:
+        pshard = param_shardings(axes, cfg, mesh, mode="serve",
+                                 attn_pref="heads_first")
+    cshard = cache_shardings(specs["cache"], cfg, mesh, shape.global_batch,
+                             kv_shard=kv_shard)
+    tok_shard = batch_shardings(
+        {"tokens": specs["tokens"]}, mesh, shape.global_batch)["tokens"]
+
+    def serve_step(params, cache, tokens):
+        return decode_fn(cfg, params, cache, tokens, mesh=mesh,
+                         batch_axes=baxes, kv_shard=kv_shard)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(pshard, cshard, tok_shard),
+                 out_shardings=(NamedSharding(mesh, P(baxes if baxes
+                                                      else None)), cshard),
+                 donate_argnums=(1,))
+    with jax.set_mesh(mesh):
+        return fn.lower(pshapes, specs["cache"], specs["tokens"]), cfg
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = RESULTS_DIR, verbose: bool = True,
+             save_hlo: bool = False, tag: str = "",
+             decode_opt: bool = False) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "chips": int(n_chips), "ok": False}
+    t0 = time.time()
+    try:
+        lowered, cfg = build_lowered(arch, shape_name, mesh,
+                                     decode_opt=decode_opt)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("generated_code_size_in_bytes",
+                      "argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec.setdefault("memory", {})[k] = int(v)
+        cost = compiled.cost_analysis()
+        if cost:
+            c = cost if isinstance(cost, dict) else cost[0]
+            rec["cost"] = {k: float(v) for k, v in c.items()
+                           if isinstance(v, (int, float))
+                           and (k in ("flops", "bytes accessed",
+                                      "optimal_seconds")
+                                or k.startswith("bytes accessed"))}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        try:
+            from .roofline import corrected_collectives
+            rec["collectives_corrected"] = corrected_collectives(hlo)
+        except Exception as e:  # noqa: BLE001 - parser is best-effort
+            rec["collectives_corrected_error"] = str(e)
+        rec["hlo_chars"] = len(hlo)
+        if save_hlo:
+            import gzip
+            os.makedirs(out_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    out_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo.gz"),
+                    "wt") as f:
+                f.write(hlo)
+        rec["n_params"] = int(cfg.n_params())
+        rec["n_active_params"] = int(cfg.active_params())
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')})"
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: {status} "
+              f"({rec['total_s']}s)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--decode-opt", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_pair(arch, shape, mk, out_dir=args.out,
+                               save_hlo=args.save_hlo, tag=args.tag,
+                               decode_opt=args.decode_opt)
+                n_fail += 0 if rec["ok"] else 1
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model substrate: layers, attention, SSM blocks, MoE, and the per-family
+model assembly (init / loss / prefill / decode)."""
+from .layers import Param, merge_params, split_params  # noqa: F401
+from .transformer import (  # noqa: F401
+    decode_fn,
+    init_cache,
+    init_params,
+    layer_pattern,
+    loss_fn,
+    prefill_fn,
+)

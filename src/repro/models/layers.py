@@ -1,0 +1,188 @@
+"""Primitive layers (pure-functional JAX) with logical-axis metadata.
+
+Every parameter is created as a ``Param(value, axes)`` where ``axes`` is a
+tuple of *logical* axis names (one per array dim).  ``repro.launch.mesh``
+maps logical axes to physical mesh axes per architecture (divisibility
+aware), so the same model code serves CPU smoke tests, the 16x16 single-pod
+mesh, and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Param",
+    "split_params",
+    "merge_params",
+    "rms_norm",
+    "layer_norm",
+    "make_rope",
+    "apply_rope",
+    "dense_init",
+    "embed_init",
+    "norm_init",
+    "linear",
+    "swiglu",
+    "gelu_mlp",
+    "cross_entropy_loss",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Param:
+    """A parameter plus its logical sharding axes (one name per dim).
+
+    Registered as a pytree node (value is the child, axes are static aux
+    data) so ``jax.eval_shape`` can trace ``init_params`` without
+    allocating — the dry-run pattern for 70B-scale configs."""
+
+    value: jnp.ndarray
+    axes: tuple
+
+    def __post_init__(self) -> None:
+        assert len(self.axes) == self.value.ndim, (
+            f"axes {self.axes} vs shape {self.value.shape}")
+
+
+def _param_unflatten(axes, children):
+    p = Param.__new__(Param)
+    p.value = children[0]
+    p.axes = axes
+    return p
+
+
+jax.tree_util.register_pytree_node(
+    Param, lambda p: ((p.value,), p.axes), _param_unflatten)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a Param tree into (values, logical_axes) trees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def merge_params(values: PyTree, axes: PyTree) -> PyTree:
+    return jax.tree.map(Param, values, axes,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray)
+                        or isinstance(x, np.ndarray))
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, scale: Optional[float] = None,
+               dtype=jnp.float32) -> Param:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                            dtype=jnp.float32)
+    return Param(v.astype(dtype), axes)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32) -> Param:
+    v = jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+    return Param((v / np.sqrt(d)).astype(dtype), ("vocab", "embed"))
+
+
+def norm_init(dim, axes=("embed",), dtype=jnp.float32) -> Param:
+    return Param(jnp.ones((dim,), dtype=dtype), axes)
+
+
+# --------------------------------------------------------------------------
+# normalization / rotary
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    """RMSNorm in fp32 accumulation (TPU-friendly)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_rope(positions, head_dim: int, theta: float = 1e4):
+    """Rotary embedding tables for integer positions: (..., hd/2) sin/cos."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., seq, heads, hd); sin/cos: (..., seq, hd/2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast sin/cos over the heads axis
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# linear / MLP
+# --------------------------------------------------------------------------
+
+def linear(x, w: jnp.ndarray, b: Optional[jnp.ndarray] = None):
+    """x @ w (+ b), contracting x's last dim with w's first dim.
+
+    ``w`` may have extra trailing dims (e.g. (d, heads, hd)) which are
+    preserved in the output.
+    """
+    out = jnp.einsum("...d,dk->...k", x, w.reshape(w.shape[0], -1))
+    out = out.reshape(x.shape[:-1] + w.shape[1:])
+    if b is not None:
+        out = out + b
+    return out
+
+
+def swiglu(x, w_in, w_gate, w_out):
+    """SwiGLU MLP: (silu(x@w_gate) * (x@w_in)) @ w_out."""
+    h = jax.nn.silu(linear(x, w_gate)) * linear(x, w_in)
+    return linear(h, w_out)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    """Classic GELU MLP (Whisper-style)."""
+    return linear(jax.nn.gelu(linear(x, w_in, b_in)), w_out, b_out)
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+def cross_entropy_loss(logits, targets, mask=None):
+    """Mean next-token cross entropy in fp32; mask: (B, S) float weights."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

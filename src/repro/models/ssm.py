@@ -1,0 +1,256 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 and mLSTM share one *chunked gated linear attention* core:
+
+    S_t = exp(a_t) * S_{t-1} + i_t * k_t v_t^T          (state: dk x dv)
+    y_t = q_t . S_t
+
+computed chunk-parallel (intra-chunk quadratic form on the MXU, inter-chunk
+state carry via ``lax.scan``) — this is the TPU-native adaptation of the
+SSD algorithm; the per-chunk matmuls are 128-aligned.  The Pallas
+``ssm_scan`` kernel implements the same contraction for the hot path;
+this jnp version is the oracle / lowering path.
+
+sLSTM has *nonlinear* recurrence (gates read h_{t-1}), so it is computed
+with an honest sequential scan over time (the xLSTM paper's design point);
+it appears only in a minority of layers (xLSTM[7:1]).
+
+Decode = single-step state updates (the delta_k == 0 workload class of the
+paper's Theorem 3: per-request serving cost is constant in response length).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "chunked_linear_attention",
+    "linear_attention_step",
+    "causal_conv1d",
+    "causal_conv1d_step",
+    "slstm_scan",
+    "slstm_step",
+]
+
+
+def chunked_linear_attention(q, k, v, log_decay, gate_in, *,
+                             chunk: int = 128, initial_state=None,
+                             normalize: bool = False):
+    """Chunk-parallel scan of the gated linear-attention recurrence.
+
+    q, k: (B, S, H, dk);  v: (B, S, H, dv);
+    log_decay: (B, S, H) (<= 0);  gate_in: (B, S, H) input gates i_t.
+    k/q may have H=1 (shared across heads, Mamba2-style) — broadcast.
+
+    Returns (y, final_state): y (B, S, H, dv), state (B, H, dk, dv).
+    If ``normalize``, divides y by a normalizer running sum (mLSTM style:
+    an extra all-ones value column).
+    """
+    B, S, H, dv = v.shape
+    dk = k.shape[-1]
+    Hk = k.shape[2]
+    if normalize:
+        v = jnp.concatenate(
+            [v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+        dv_full = dv + 1
+    else:
+        dv_full = dv
+
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+
+    def padseq(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2)) \
+            if pad else x
+
+    # broadcast shared (Mamba2-style) k/q to all heads up front
+    if Hk == 1 and H != 1:
+        k = jnp.broadcast_to(k, (B, S, H, dk))
+    if q.shape[2] == 1 and H != 1:
+        q = jnp.broadcast_to(q, (B, S, H, dk))
+
+    qf = padseq(q).astype(jnp.float32)
+    kf = padseq(k).astype(jnp.float32)
+    vf = padseq(v).astype(jnp.float32)
+    af = padseq(log_decay).astype(jnp.float32)
+    gf = padseq(gate_in).astype(jnp.float32)
+    if pad:  # padded steps must not decay or contribute
+        valid = jnp.arange(n_chunks * chunk) < S
+        af = af * valid[None, :, None]
+        gf = gf * valid[None, :, None]
+
+    # reshape to (B, n_chunks, chunk, ...)
+    def c(x):
+        return x.reshape((B, n_chunks, chunk) + x.shape[2:])
+
+    qc, kc, vc, ac, gc = c(qf), c(kf), c(vf), c(af), c(gf)
+    A = jnp.cumsum(ac, axis=2)                       # (B, n, C, H) cum decay
+    A_tot = A[:, :, -1]                              # (B, n, H)
+
+    # intra-chunk: y[t] = sum_{tau<=t} exp(A_t - A_tau) g_tau (q_t.k_tau) v_tau
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    scores = jnp.einsum("bnchd,bnshd->bnhcs", qc, kc)
+    At = A.transpose(0, 1, 3, 2)                     # (B,n,H,C)
+    pair = jnp.clip(At[..., :, None] - At[..., None, :], -60.0, 60.0)
+    decay_ct = jnp.exp(pair) * tri[None, None, None]  # (B,n,H,C,S)
+    gates = gc.transpose(0, 1, 3, 2)                 # (B,n,H,S)
+    w = scores * decay_ct * gates[..., None, :]      # (B,n,H,C,S)
+    y_intra = jnp.einsum("bnhcs,bnshd->bnchd", w, vc)
+
+    # inter-chunk: carry state across chunks
+    # chunk input to state: U_n = sum_tau exp(A_tot - A_tau) g_tau k_tau v_tau^T
+    wk = jnp.exp(jnp.clip(A_tot[:, :, None, :] - A, -60, 60)) * gc  # (B,n,C,H)
+    U = jnp.einsum("bnchk,bnchv,bnch->bnhkv", kc, vc, wk)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv_full), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+        if normalize and initial_state.shape[-1] == dv:
+            initial_state = jnp.concatenate(
+                [initial_state,
+                 jnp.zeros(initial_state.shape[:-1] + (1,), jnp.float32)],
+                axis=-1)
+
+    scan_in = (A_tot.transpose(1, 0, 2),             # (n, B, H)
+               U.transpose(1, 0, 2, 3, 4),           # (n, B, H, dk, dv)
+               qc.transpose(1, 0, 2, 3, 4),          # (n, B, C, H, dk)
+               A.transpose(1, 0, 2, 3))              # (n, B, C, H)
+
+    def scan_body(state, xs):
+        a_tot, u, q_n, a_cum = xs
+        yi = jnp.einsum("bchk,bhkv,bch->bchv", q_n, state,
+                        jnp.exp(jnp.clip(a_cum, -60, 60)))
+        state = (jnp.exp(jnp.clip(a_tot, -60, 60))[..., None, None] * state
+                 + u)
+        return state, yi
+
+    state, y_inter = jax.lax.scan(scan_body, initial_state, scan_in)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(
+        B, n_chunks * chunk, H, dv_full)
+    y = y_intra.reshape(B, n_chunks * chunk, H, dv_full) + y_inter
+    y = y[:, :S]
+    if normalize:
+        norm = y[..., -1:]
+        y = y[..., :-1] / jnp.maximum(jnp.abs(norm), 1e-6)
+    return y.astype(v.dtype), state
+
+
+def linear_attention_step(q, k, v, log_decay, gate_in, state, *,
+                          normalize: bool = False):
+    """Single decode step of the same recurrence.
+
+    q, k: (B, H, dk); v: (B, H, dv); log_decay, gate_in: (B, H);
+    state: (B, H, dk, dv(+1)).  Returns (y (B, H, dv), new_state).
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if normalize:
+        vf = jnp.concatenate([vf, jnp.ones(vf.shape[:-1] + (1,),
+                                           jnp.float32)], axis=-1)
+    a = jnp.exp(jnp.clip(log_decay.astype(jnp.float32), -60, 60))
+    u = jnp.einsum("bhk,bhv,bh->bhkv", kf, vf, gate_in.astype(jnp.float32))
+    state = a[..., None, None] * state.astype(jnp.float32) + u
+    y = jnp.einsum("bhk,bhkv->bhv", qf, state)
+    if normalize:
+        norm = y[..., -1:]
+        y = y[..., :-1] / jnp.maximum(jnp.abs(norm), 1e-6)
+    return y.astype(v.dtype), state
+
+
+def causal_conv1d(x, w, *, initial_state=None, lengths=None):
+    """Depthwise causal conv over time. x: (B, S, D); w: (K, D).
+
+    Returns (y (B, S, D), final_state (B, K-1, D)).  With ``lengths`` the
+    final state is gathered at the last *valid* K-1 positions per row
+    (ragged prefill)."""
+    B, S, D = x.shape
+    K = w.shape[0]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, K - 1, D), x.dtype)
+    xp = jnp.concatenate([initial_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K is small (4); unrolled taps
+        y = y + xp[:, i:i + S].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)[None, None, :]
+    if lengths is None:
+        state = xp[:, S:]  # last K-1 inputs
+    else:
+        # xp index of the j-th state entry for row b: lengths[b] + j
+        idx = lengths[:, None] + jnp.arange(K - 1)[None, :]   # (B, K-1)
+        state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    return y.astype(x.dtype), state
+
+
+def causal_conv1d_step(x, w, state):
+    """Single-token conv step. x: (B, D); state: (B, K-1, D)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([state, x[:, None, :]], axis=1)  # (B, K, D)
+    y = jnp.einsum("bkd,kd->bd", xp.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return y.astype(x.dtype), xp[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# sLSTM (nonlinear recurrence -> sequential scan)
+# --------------------------------------------------------------------------
+
+def _slstm_cell(h, c, n, m, x_gates, r_weights):
+    """One sLSTM step.  h, c, n: (B, H, hd); m: (B, H, hd) stabilizer.
+    x_gates: (B, H, 4, hd) input contributions (W x + b) for i,f,z,o;
+    r_weights: (H, 4, hd, hd) block-diagonal recurrent weights."""
+    rec = jnp.einsum("bhd,hgde->bhge", h, r_weights)   # (B, H, 4, hd)
+    g = (x_gates + rec).astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+    # exponential gating with stabilizer (xLSTM eqs.)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(jnp.clip(i_pre - m_new, -60, 0))
+    f_g = jnp.exp(jnp.clip(log_f + m - m_new, -60, 0))
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_scan(x_gates, r_weights, *, initial=None, valid=None):
+    """Sequential sLSTM over time.  x_gates: (B, S, H, 4, hd).
+    ``valid``: optional (B, S) bool — padding steps leave the state frozen.
+    Returns (h_seq (B, S, H, hd), final (h, c, n, m))."""
+    B, S, H, _, hd = x_gates.shape
+    if initial is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        initial = (z, z, z, jnp.full((B, H, hd), -1e30, jnp.float32))
+
+    def body(carry, xs):
+        if valid is not None:
+            xg, vl = xs
+        else:
+            xg = xs
+        h, c, n, m = carry
+        h2, c2, n2, m2 = _slstm_cell(h, c, n, m, xg, r_weights)
+        if valid is not None:
+            keep = vl[:, None, None]
+            h2 = jnp.where(keep, h2, h)
+            c2 = jnp.where(keep, c2, c)
+            n2 = jnp.where(keep, n2, n)
+            m2 = jnp.where(keep, m2, m)
+        return (h2, c2, n2, m2), h2
+
+    xs = (x_gates.swapaxes(0, 1), valid.swapaxes(0, 1)) \
+        if valid is not None else x_gates.swapaxes(0, 1)
+    (h, c, n, m), hs = jax.lax.scan(body, initial, xs)
+    return hs.swapaxes(0, 1).astype(x_gates.dtype), (h, c, n, m)
+
+
+def slstm_step(x_gates, r_weights, state):
+    """Single decode step.  x_gates: (B, H, 4, hd)."""
+    h, c, n, m = state
+    h, c, n, m = _slstm_cell(h, c, n, m, x_gates, r_weights)
+    return h.astype(x_gates.dtype), (h, c, n, m)

@@ -1,0 +1,6 @@
+"""Serving runtime: the multi-worker decode engine with router-integrated
+load balancing (the paper's system, runnable), paged KV cache memory
+management, and the device-side routed serving loop."""
+from .engine import EngineConfig, ServeRequest, ServingEngine  # noqa: F401
+from .device_loop import init_loop_state, make_device_serving_loop  # noqa: F401
+from .paged_cache import BlockAllocator, PagedKVCache  # noqa: F401

@@ -1,0 +1,134 @@
+"""Device-side routed decode loop: BF-IO fused into a jitted multi-step
+serving loop.
+
+The host engine (engine.py) calls the router between device steps — the
+realistic deployment.  This module shows the *other* integration the
+jittable balancer (repro.core.balancer_jax) enables: an entire
+admit→decode→complete loop under one ``jax.lax`` program, so a TPU can run
+many serving steps without host round-trips (useful for simulation at
+device speed and for offline batch inference).
+
+State is fixed-shape: a slot table (G*B slots), a bounded waiting buffer,
+and the BF-IO assignment runs as traced code each step.  Workload dynamics
+follow the paper's model (unit KV drift, known-at-admission prefill sizes,
+completion at a fixed per-request decode length).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.balancer_jax import bfio_assign
+
+__all__ = ["LoopState", "make_device_serving_loop"]
+
+
+class LoopState(NamedTuple):
+    slot_active: jnp.ndarray    # (G*B,) bool
+    slot_load: jnp.ndarray      # (G*B,) f32 current per-step workload
+    slot_remaining: jnp.ndarray  # (G*B,) i32 decode steps left
+    wait_prefill: jnp.ndarray   # (W,) f32, 0 = empty entry
+    wait_remaining: jnp.ndarray  # (W,) i32
+    tot_imbalance: jnp.ndarray  # () f32
+    tot_steps: jnp.ndarray      # () i32
+
+
+def make_device_serving_loop(G: int, B: int, wait_cap: int,
+                             swap_iters: int = 4):
+    """Returns jitted ``run(state, n_steps) -> state`` executing the
+    admit/decode/complete loop fully on device."""
+    S = G * B
+    slot_worker = jnp.repeat(jnp.arange(G), B)
+
+    def step(state: LoopState, _):
+        # --- current loads ------------------------------------------------
+        loads = jax.ops.segment_sum(
+            jnp.where(state.slot_active, state.slot_load, 0.0),
+            slot_worker, num_segments=G)                       # (G,)
+        counts = jax.ops.segment_sum(
+            state.slot_active.astype(jnp.int32), slot_worker,
+            num_segments=G)
+        caps = B - counts
+
+        # --- BF-IO admission (H=0, jitted) ---------------------------------
+        valid = state.wait_prefill > 0
+        n_admit = jnp.minimum(valid.sum(), caps.sum()).astype(jnp.int32)
+        assign = bfio_assign(loads[:, None], caps,
+                             state.wait_prefill[:, None], valid, n_admit,
+                             swap_iters=swap_iters)            # (W,)
+
+        # place admitted candidates into free slots of their worker:
+        # slot rank within worker == assignment rank within worker
+        def place(carry, i):
+            slot_active, slot_load, slot_rem, wp, wr = carry
+            g = assign[i]
+
+            def do_place(args):
+                slot_active, slot_load, slot_rem, wp, wr = args
+                free = (~slot_active) & (slot_worker == g)
+                idx = jnp.argmax(free)          # first free slot of g
+                ok = free[idx]
+                slot_active = slot_active.at[idx].set(
+                    jnp.where(ok, True, slot_active[idx]))
+                slot_load = slot_load.at[idx].set(
+                    jnp.where(ok, wp[i], slot_load[idx]))
+                slot_rem = slot_rem.at[idx].set(
+                    jnp.where(ok, wr[i], slot_rem[idx]))
+                wp = wp.at[i].set(jnp.where(ok, 0.0, wp[i]))
+                wr = wr.at[i].set(jnp.where(ok, 0, wr[i]))
+                return slot_active, slot_load, slot_rem, wp, wr
+
+            return jax.lax.cond(g >= 0, do_place, lambda a: a,
+                                (slot_active, slot_load, slot_rem, wp,
+                                 wr)), None
+
+        (slot_active, slot_load, slot_rem, wp, wr), _ = jax.lax.scan(
+            place,
+            (state.slot_active, state.slot_load, state.slot_remaining,
+             state.wait_prefill, state.wait_remaining),
+            jnp.arange(wait_cap))
+
+        # --- barrier step metrics ------------------------------------------
+        loads = jax.ops.segment_sum(
+            jnp.where(slot_active, slot_load, 0.0), slot_worker,
+            num_segments=G)
+        imb = G * loads.max() - loads.sum()
+
+        # --- token generation / completion / drift -------------------------
+        slot_rem = jnp.where(slot_active, slot_rem - 1, slot_rem)
+        done = slot_active & (slot_rem <= 0)
+        slot_active = slot_active & ~done
+        slot_load = jnp.where(slot_active, slot_load + 1.0, 0.0)
+
+        return LoopState(slot_active, slot_load, slot_rem, wp, wr,
+                         state.tot_imbalance + imb,
+                         state.tot_steps + 1), None
+
+    @functools.partial(jax.jit, static_argnames=("n_steps",))
+    def run(state: LoopState, n_steps: int) -> LoopState:
+        state, _ = jax.lax.scan(step, state, None, length=n_steps)
+        return state
+
+    return run
+
+
+def init_loop_state(G: int, B: int, wait_prefill, wait_remaining,
+                    wait_cap: int) -> LoopState:
+    S = G * B
+    W = wait_cap
+    wp = jnp.zeros((W,), jnp.float32).at[:len(wait_prefill)].set(
+        jnp.asarray(wait_prefill, jnp.float32))
+    wr = jnp.zeros((W,), jnp.int32).at[:len(wait_remaining)].set(
+        jnp.asarray(wait_remaining, jnp.int32))
+    return LoopState(
+        slot_active=jnp.zeros((S,), bool),
+        slot_load=jnp.zeros((S,), jnp.float32),
+        slot_remaining=jnp.zeros((S,), jnp.int32),
+        wait_prefill=wp,
+        wait_remaining=wr,
+        tot_imbalance=jnp.zeros((), jnp.float32),
+        tot_steps=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,276 @@
+"""Multi-worker decode serving engine with pluggable routing.
+
+This is the paper's system diagram (Fig. 3) as a runnable engine:
+
+  * G decode workers (the DP shards), each with B KV-cache slots;
+  * prefill produces a request's cache entry; the *router* (FCFS / JSQ /
+    BF-IO / ...) assigns it to a worker — sticky thereafter;
+  * every engine step decodes ONE token for all active requests on all
+    workers (the barrier-synchronized step), with per-worker wall-time
+    modeled as ``c + t_token * L_g`` and the step gated by max_g L_g;
+  * completions free slots; the router refills them from the wait queue.
+
+For CPU-testable end-to-end runs the workers share one jitted model and
+the per-worker batches are stacked; on a production mesh the worker axis
+is the "data" mesh axis (each DP shard holds its own slots) and the same
+engine code drives the device-sharded batch.  The router's decision
+problem is *identical* in both cases — that is the point of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.energy import A100_POWER, PowerModel
+from ..core.metrics import step_imbalance
+from ..core.policies import Policy, SchedulerContext
+from ..core.workload import DriftModel, drift_for_family
+from ..models import decode_fn, init_cache, prefill_fn
+
+__all__ = ["ServeRequest", "EngineConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    tokens: np.ndarray              # prompt token ids
+    max_new_tokens: int = 32
+    eos_id: int = -1                # -1: never stops early
+    # filled by the engine:
+    worker: int = -1
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first_token: float = float("nan")
+    t_finish: float = float("nan")
+
+    @property
+    def done(self) -> bool:
+        return not np.isnan(self.t_finish)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_workers: int = 4              # G
+    slots_per_worker: int = 8       # B
+    max_seq_len: int = 256
+    prefill_pad: int = 64           # prompts padded to this for prefill
+    step_overhead: float = 9.775e-3
+    t_token: float = 1.005e-7
+    power: PowerModel = A100_POWER
+    greedy: bool = True             # greedy sampling
+
+
+class ServingEngine:
+    """Continuous-batching decode engine over G logical workers."""
+
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 policy: Policy, *, mesh=None, drift: DriftModel = None):
+        self.cfg = cfg
+        self.params = params
+        self.ec = engine_cfg
+        self.policy = policy
+        self.mesh = mesh
+        self.drift = drift or drift_for_family(cfg.family)
+        G, B = engine_cfg.n_workers, engine_cfg.slots_per_worker
+        self.G, self.B = G, B
+        N = G * B
+        # one flat cache over all slots; slot s belongs to worker s // B
+        self.cache = init_cache(cfg, N, engine_cfg.max_seq_len)
+        self.slot_req: list[Optional[ServeRequest]] = [None] * N
+        self.slot_tokens = np.zeros(N, dtype=np.int32)   # next input token
+        self.slot_load = np.zeros(N, dtype=np.float64)   # workload proxy
+        self.wait: list[ServeRequest] = []
+        self.t_now = 0.0
+        self.steps = 0
+        self.energy_j = 0.0
+        self.imbalance_sum = 0.0
+        self.tokens_out = 0
+        self.rng = np.random.default_rng(0)
+
+        self._decode = jax.jit(
+            lambda p, c, t: decode_fn(cfg, p, c, t, mesh=mesh))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        req.t_submit = self.t_now
+        self.wait.append(req)
+
+    def _worker_of(self, slot: int) -> int:
+        return slot // self.B
+
+    def _loads(self) -> np.ndarray:
+        loads = np.zeros(self.G)
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                loads[self._worker_of(s)] += self.slot_load[s]
+        return loads
+
+    def _counts(self) -> np.ndarray:
+        counts = np.zeros(self.G, dtype=np.int64)
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                counts[self._worker_of(s)] += 1
+        return counts
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Router step: assign waiting requests to free slots."""
+        if not self.wait:
+            return
+        counts = self._counts()
+        caps = self.B - counts
+        if caps.sum() <= 0:
+            return
+        loads = self._loads()
+        act = [(s, r) for s, r in enumerate(self.slot_req) if r is not None]
+        ctx = SchedulerContext(
+            k=self.steps,
+            loads=loads,
+            counts=counts,
+            caps=caps.astype(np.int64),
+            wait_prefill=np.array([len(r.tokens) for r in self.wait],
+                                  dtype=np.float64),
+            active_worker=np.array([self._worker_of(s) for s, _ in act],
+                                   dtype=np.int64),
+            active_w=np.array([self.slot_load[s] for s, _ in act]),
+            active_age=np.array([len(r.generated) for _, r in act],
+                                dtype=np.int64),
+            active_remaining=np.array(
+                [max(r.max_new_tokens - len(r.generated), 1)
+                 for _, r in act], dtype=np.int64),
+            drift=self.drift,
+            rng=self.rng,
+        )
+        assignment = self.policy.assign(ctx)
+        to_admit: list[tuple[ServeRequest, int]] = []
+        for pos, g in enumerate(assignment):
+            if g >= 0:
+                to_admit.append((self.wait[pos], int(g)))
+        if not to_admit:
+            return
+        admitted = {id(r) for r, _ in to_admit}
+        self.wait = [r for r in self.wait if id(r) not in admitted]
+        self._prefill_batch(to_admit)
+
+    def _prefill_batch(self, items: list[tuple["ServeRequest", int]]) -> None:
+        """Run prefill for admitted requests and write their cache slots."""
+        ec = self.ec
+        pad = max(ec.prefill_pad,
+                  max(len(r.tokens) for r, _ in items))
+        nb = len(items)
+        toks = np.zeros((nb, pad), dtype=np.int32)
+        lens = np.zeros(nb, dtype=np.int32)
+        for i, (r, _) in enumerate(items):
+            L = min(len(r.tokens), pad)
+            toks[i, :L] = r.tokens[:L]
+            lens[i] = L
+        batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (nb, self.cfg.patch_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (nb, self.cfg.encoder_seq, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        logits, mini_cache = prefill_fn(self.cfg, self.params, batch,
+                                        max_len=ec.max_seq_len,
+                                        mesh=self.mesh)
+        first = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)
+
+        # place each request into a free slot of its assigned worker
+        for i, (r, g) in enumerate(items):
+            slot = next(s for s in range(g * self.B, (g + 1) * self.B)
+                        if self.slot_req[s] is None)
+            r.worker, r.slot = g, slot
+            self.slot_req[slot] = r
+            self.slot_tokens[slot] = first[i]
+            self.slot_load[slot] = float(lens[i])
+            r.generated.append(int(first[i]))
+            if np.isnan(r.t_first_token):
+                r.t_first_token = self.t_now
+            self._copy_cache_slot(mini_cache, i, slot)
+
+    def _copy_cache_slot(self, mini_cache, src: int, dst: int) -> None:
+        """Copy one request's cache entry into the engine's flat cache.
+
+        Cache leaves are stacked (layers, batch, ...): batch is dim 1,
+        except 'lengths' (batch is dim 0)."""
+        def copy(dst_leaf, src_leaf):
+            if dst_leaf.ndim >= 2 and src_leaf.shape[0] != dst_leaf.shape[0]:
+                pass
+            if dst_leaf.ndim == 1:       # lengths
+                return dst_leaf.at[dst].set(src_leaf[src])
+            # (layers, batch, ...): maybe shorter kv length in mini cache
+            s = src_leaf[:, src]
+            if s.shape[0] != dst_leaf.shape[0]:
+                raise ValueError("layer-count mismatch")
+            d = dst_leaf[:, dst]
+            if s.shape != d.shape:
+                # pad kv length dim (dim 0 after the two indexes -> dim 0
+                # of s is layers... kv len is axis 1 of s)
+                pads = [(0, d.shape[i] - s.shape[i]) for i in range(s.ndim)]
+                s = jnp.pad(s, pads)
+            return dst_leaf.at[:, dst].set(s.astype(dst_leaf.dtype))
+
+        self.cache = jax.tree.map(copy, self.cache, mini_cache)
+
+    # ------------------------------------------------------------------
+    def step(self) -> dict:
+        """One barrier-synchronized decode step for all active requests."""
+        self._admit()
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        loads = self._loads()
+        lmax = float(loads.max()) if len(active) else 0.0
+        dt = self.ec.step_overhead + self.ec.t_token * lmax
+        u = loads / lmax if lmax > 0 else np.zeros(self.G)
+        self.energy_j += dt * float(self.ec.power.power(u).sum())
+        self.imbalance_sum += step_imbalance(loads) if len(active) else 0.0
+        self.t_now += dt
+        self.steps += 1
+
+        if active:
+            tokens = jnp.asarray(self.slot_tokens)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens)
+            nxt = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)
+            for s in active:
+                r = self.slot_req[s]
+                tok = int(nxt[s])
+                r.generated.append(tok)
+                self.slot_tokens[s] = tok
+                self.tokens_out += 1
+                self.slot_load[s] += self.drift.increment(self.steps)
+                if (len(r.generated) >= r.max_new_tokens
+                        or tok == r.eos_id):
+                    r.t_finish = self.t_now
+                    self.slot_req[s] = None
+                    self.slot_load[s] = 0.0
+        return {"t": self.t_now, "active": len(active),
+                "waiting": len(self.wait), "max_load": lmax,
+                "imbalance": step_imbalance(loads) if active else 0.0}
+
+    def run(self, max_steps: int = 10_000) -> dict:
+        """Step until all submitted requests finish."""
+        while (self.wait or any(r is not None for r in self.slot_req)):
+            if self.steps >= max_steps:
+                raise RuntimeError("engine exceeded max_steps")
+            self.step()
+        return self.stats()
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.steps,
+            "time_s": self.t_now,
+            "tokens": self.tokens_out,
+            "throughput_tok_s": self.tokens_out / max(self.t_now, 1e-12),
+            "energy_j": self.energy_j,
+            "avg_imbalance": self.imbalance_sum / max(self.steps, 1),
+            "policy": self.policy.name,
+        }

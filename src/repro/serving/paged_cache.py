@@ -1,0 +1,169 @@
+"""Paged KV cache: vLLM-style block-table memory management in JAX.
+
+The engine's naive cache reserves max_seq_len per slot; under the paper's
+workload (geometric decode lengths, heavy prefill dispersion) that wastes
+most of HBM.  Paging allocates fixed-size KV blocks from a shared pool and
+maps request -> [block ids], so resident KV equals actual tokens (rounded
+to the block size).  This is the memory substrate that makes the paper's
+B=72-slots-per-worker batching feasible at 32k contexts.
+
+Host-side allocator (python, like real engines' schedulers) + device-side
+paged gather/attention (see repro.kernels.paged_attention for the Pallas
+kernel; the jnp path here is the oracle and CPU path).
+
+Layout: pool tensors k/v of shape (n_blocks, block_size, Hkv, hd); block
+tables (B, max_blocks) int32 (-1 = unallocated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockAllocator", "PagedKVCache", "paged_decode_attention_ref"]
+
+
+class BlockAllocator:
+    """Free-list allocator over a fixed pool of KV blocks (host side)."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: want {n}, have {len(self._free)}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b < 0 or b >= self.n_blocks:
+                raise ValueError(f"bad block id {b}")
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """One layer-stacked paged cache + per-request block tables."""
+
+    k_pool: jnp.ndarray          # (layers, n_blocks, block, Hkv, hd)
+    v_pool: jnp.ndarray
+    block_tables: np.ndarray     # (B, max_blocks) int32, host-managed
+    lengths: np.ndarray          # (B,) int32, host mirror
+    block_size: int
+    allocator: BlockAllocator
+    req_blocks: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def create(cls, *, n_layers: int, n_blocks: int, block_size: int,
+               n_kv_heads: int, head_dim: int, max_requests: int,
+               max_blocks_per_req: int, dtype=jnp.bfloat16):
+        z = jnp.zeros((n_layers, n_blocks, block_size, n_kv_heads,
+                       head_dim), dtype)
+        return cls(
+            k_pool=z, v_pool=jnp.zeros_like(z),
+            block_tables=np.full((max_requests, max_blocks_per_req), -1,
+                                 dtype=np.int32),
+            lengths=np.zeros(max_requests, dtype=np.int32),
+            block_size=block_size,
+            allocator=BlockAllocator(n_blocks),
+        )
+
+    # -- host-side bookkeeping -------------------------------------------
+    def admit(self, slot: int, prompt_len: int) -> None:
+        """Reserve blocks for a request's prompt KV (after prefill)."""
+        n = -(-max(prompt_len, 1) // self.block_size)
+        blocks = self.allocator.alloc(n)
+        self.block_tables[slot, :] = -1
+        self.block_tables[slot, :n] = blocks
+        self.lengths[slot] = prompt_len
+        self.req_blocks[slot] = blocks
+
+    def append_token(self, slot: int) -> None:
+        """Grow by one token; allocate a new block at block boundaries."""
+        self.lengths[slot] += 1
+        L = int(self.lengths[slot])
+        n_have = len(self.req_blocks.get(slot, []))
+        n_need = -(-L // self.block_size)
+        if n_need > n_have:
+            new = self.allocator.alloc(n_need - n_have)
+            self.block_tables[slot, n_have:n_need] = new
+            self.req_blocks[slot].extend(new)
+
+    def release(self, slot: int) -> None:
+        blocks = self.req_blocks.pop(slot, [])
+        self.allocator.free(blocks)
+        self.block_tables[slot, :] = -1
+        self.lengths[slot] = 0
+
+    def utilization(self) -> float:
+        used = self.allocator.n_blocks - self.allocator.n_free
+        return used / max(self.allocator.n_blocks, 1)
+
+    # -- device-side ops ---------------------------------------------------
+    def write_prompt(self, layer: int, slot: int, k: jnp.ndarray,
+                     v: jnp.ndarray) -> None:
+        """Scatter a prompt's KV (S, Hkv, hd) into this request's blocks."""
+        S = k.shape[0]
+        bs = self.block_size
+        n = -(-S // bs)
+        pad = n * bs - S
+        if pad:
+            k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        kb = k.reshape(n, bs, *k.shape[1:])
+        vb = v.reshape(n, bs, *v.shape[1:])
+        idx = jnp.asarray(self.block_tables[slot, :n], jnp.int32)
+        self.k_pool = self.k_pool.at[layer, idx].set(
+            kb.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[layer, idx].set(
+            vb.astype(self.v_pool.dtype))
+
+    def write_token(self, layer: int, slot: int, k: jnp.ndarray,
+                    v: jnp.ndarray) -> None:
+        """Write one token's KV (Hkv, hd) at the current length position."""
+        pos = int(self.lengths[slot]) - 1
+        blk = self.block_tables[slot, pos // self.block_size]
+        off = pos % self.block_size
+        self.k_pool = self.k_pool.at[layer, blk, off].set(
+            k.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[layer, blk, off].set(
+            v.astype(self.v_pool.dtype))
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               block_size: int):
+    """One-token GQA attention over a paged cache (jnp oracle).
+
+    q: (B, Hq, hd); k_pool/v_pool: (n_blocks, block, Hkv, hd) for ONE
+    layer; block_tables: (B, max_blocks) int32; lengths: (B,).
+    """
+    B, hq, hd = q.shape
+    hkv = k_pool.shape[2]
+    g = hq // hkv
+    max_blocks = block_tables.shape[1]
+    L = max_blocks * block_size
+    # gather each request's blocks into a contiguous view (oracle only;
+    # the Pallas kernel streams blocks without materializing this)
+    bt = jnp.clip(block_tables, 0, k_pool.shape[0] - 1)
+    k = k_pool[bt]                          # (B, max_blocks, bs, Hkv, hd)
+    v = v_pool[bt]
+    k = k.reshape(B, L, hkv, hd)
+    v = v.reshape(B, L, hkv, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qf = q.reshape(B, hkv, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,blhd->bhgl", qf, k.astype(jnp.float32))
+    pos = jnp.arange(L)[None, :]
+    mask = pos < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, hq, hd).astype(q.dtype)

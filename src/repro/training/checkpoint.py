@@ -1,0 +1,62 @@
+"""Minimal checkpointing: flat-key .npz snapshots of (params, opt state,
+step) with pytree-structure JSON sidecars.  No orbax dependency."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    np.savez(path, **flat)
+    meta = {"step": step, "keys": sorted(flat.keys())}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_checkpoint(ckpt_dir: str, like: PyTree, step: int | None = None
+                    ) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(ckpt_dir)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None

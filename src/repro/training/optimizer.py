@@ -1,0 +1,89 @@
+"""Pure-jnp AdamW with gradient clipping and cosine schedule.
+
+State is a pytree mirroring the params (m, v in fp32), so the launcher can
+shard it with the same rules as the parameters (ZeRO-style when the rules
+put params on ("data", "model"))."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update",
+           "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray       # ()
+    m: PyTree               # fp32, like params
+    v: PyTree               # fp32, like params
+
+
+def init_opt_state(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: PyTree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params: PyTree, grads: PyTree,
+                 state: OptState) -> tuple[PyTree, OptState]:
+    """One AdamW step (params fp32 master copies)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v)

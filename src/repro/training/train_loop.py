@@ -1,0 +1,124 @@
+"""Training loop: jit'd train_step + host loop with logging/checkpointing.
+
+``make_train_step`` builds the canonical step used both by examples (small
+models, CPU) and by the dry-run launcher (production meshes, AOT lowering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import loss_fn
+from .checkpoint import save_checkpoint
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+PyTree = Any
+
+__all__ = ["TrainState", "make_train_step", "train"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: OptState
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, mesh=None,
+                    batch_axes=("data",), act_spec=None,
+                    compute_dtype="bfloat16", grad_accum: int = 1,
+                    grad_shardings=None,
+                    remat: bool = True) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt).
+
+    Mixed precision: fp32 master params (ZeRO-sharded by the launcher) are
+    cast to ``compute_dtype`` inside the loss, so FSDP all-gathers and all
+    matmuls run in bf16; grads flow back into fp32 Adam state.
+
+    ``grad_accum`` > 1 splits the global batch into microbatches inside a
+    ``lax.scan``, dividing peak activation memory by the accumulation
+    factor (the grads tree is ZeRO-sharded, so accumulating it is cheap) —
+    this is the knob that fits 72B-class train steps on 16 GB chips."""
+    cdt = jnp.dtype(compute_dtype)
+
+    def cast(p):
+        return p.astype(cdt) if (p.dtype == jnp.float32 and p.ndim > 1) \
+            else p
+
+    def lf(p, mb):
+        pc = jax.tree.map(cast, p)
+        return loss_fn(cfg, pc, mb, mesh=mesh, batch_axes=batch_axes,
+                       act_spec=act_spec, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum <= 1:
+            loss, grads = jax.value_and_grad(lf)(params, batch)
+        else:
+            B = jax.tree.leaves(batch)[0].shape[0]
+            assert B % grad_accum == 0, (B, grad_accum)
+            mbsz = B // grad_accum
+
+            def body(carry, i):
+                lsum, gsum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * mbsz, mbsz, axis=0), batch)
+                l, g = jax.value_and_grad(lf)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                if grad_shardings is not None:
+                    # ZeRO: keep the accumulator sharded like the params so
+                    # each microbatch's grad is reduce-scattered, not
+                    # all-reduced (perf iteration: qwen2-72b train)
+                    gsum = jax.lax.with_sharding_constraint(
+                        gsum, grad_shardings)
+                return (lsum + l, gsum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (lsum, gsum), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0),
+                jnp.arange(grad_accum))
+            loss = lsum / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state)
+        return loss, new_params, new_opt
+
+    return train_step
+
+
+def train(
+    cfg: ModelConfig,
+    *,
+    params: PyTree,
+    batches,
+    opt_cfg: Optional[AdamWConfig] = None,
+    mesh=None,
+    log_every: int = 10,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    log_fn=print,
+) -> tuple[PyTree, list[float]]:
+    """Host training loop over an iterable of batches; returns the trained
+    params and the loss history."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, mesh=mesh))
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, params, opt_state = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if log_every and i % log_every == 0:
+            log_fn(f"step {i:5d} loss {losses[-1]:.4f} "
+                   f"({time.time() - t0:.1f}s)")
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1,
+                            {"params": params, "opt_m": opt_state.m,
+                             "opt_v": opt_state.v})
+    return params, losses

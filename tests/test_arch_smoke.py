@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced variants (<=2 layers, d_model<=256,
+<=4 experts) run one forward/train step and a prefill+decode step on CPU,
+asserting output shapes and absence of NaNs."""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import (
+    decode_fn,
+    init_params,
+    loss_fn,
+    prefill_fn,
+    split_params,
+)
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    batch["targets"] = batch["tokens"]
+    batch["mask"] = jnp.ones((B, S), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.patch_tokens, cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, mesh):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
+    batch = _batch(cfg)
+
+    def step(p):
+        return loss_fn(cfg, p, batch, mesh=mesh)
+
+    loss, grads = jax.value_and_grad(step)(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in gleaves), \
+        f"{arch}: non-finite grads"
+    # one SGD step still yields a finite loss
+    p2 = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                      params, grads)
+    assert np.isfinite(float(step(p2))), f"{arch}: diverged after step"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_smoke(arch, mesh):
+    cfg = get_smoke_config(arch)
+    params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
+    B, S = 2, 16
+    batch = _batch(cfg, B=B, S=S)
+    pf = {k: v for k, v in batch.items() if k not in ("targets", "mask")}
+    pf["lengths"] = jnp.array([S - 4, S], jnp.int32)
+    logits, cache = prefill_fn(cfg, params, pf, max_len=S + 8, mesh=mesh)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: prefill NaN"
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = decode_fn(cfg, params, cache, tok, mesh=mesh)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: decode NaN"
+    assert int(cache["lengths"][1]) == S + 3
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "qwen3-moe-30b-a3b",
+                                  "xlstm-350m", "zamba2-1.2b"])
+def test_decode_matches_teacher_forcing(arch, mesh):
+    """Strong consistency: sequential decode equals full-sequence forward."""
+    cfg = get_smoke_config(arch)
+    # float32 for tight comparison; generous MoE capacity so the dropped-
+    # token path (which legitimately differs between batched prefill and
+    # step-wise decode) never triggers
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32", capacity_factor=8.0)
+    params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
+    B, S = 2, 12
+    batch = _batch(cfg, B=B, S=S, seed=3)
+    pf_part = {"tokens": batch["tokens"],
+               "lengths": jnp.full((B,), 8, jnp.int32)}
+    pf_full = {"tokens": batch["tokens"],
+               "lengths": jnp.full((B,), S, jnp.int32)}
+    for extra in ("patches", "frames"):
+        if extra in batch:
+            pf_part[extra] = batch[extra]
+            pf_full[extra] = batch[extra]
+    lg, cache = prefill_fn(cfg, params, pf_part, max_len=S + 2, mesh=mesh)
+    lg_full, _ = prefill_fn(cfg, params, pf_full, max_len=S + 2, mesh=mesh)
+    for t in range(8, S):
+        lg, cache = decode_fn(cfg, params, cache, batch["tokens"][:, t],
+                              mesh=mesh)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full),
+                               atol=2e-3, rtol=1e-3)

@@ -1,0 +1,99 @@
+"""Data pipeline tests: length distributions, traces, token batches."""
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, make_policy, simulate
+from repro.data import (
+    BURSTGPT_LIKE,
+    LONGBENCH_LIKE,
+    batched_rounds_instance,
+    bursty_trace,
+    decode_sampler,
+    overload_rate,
+    poisson_trace,
+    prefill_sampler,
+    token_batches,
+)
+
+
+class TestSamplers:
+    def test_prefill_bounds(self):
+        rng = np.random.default_rng(0)
+        s = prefill_sampler(LONGBENCH_LIKE)(rng, 10_000)
+        assert s.min() >= LONGBENCH_LIKE.s_min
+        assert s.max() <= LONGBENCH_LIKE.s_max
+
+    def test_decode_geometric_mean(self):
+        rng = np.random.default_rng(0)
+        o = decode_sampler(LONGBENCH_LIKE)(rng, 50_000)
+        assert o.min() >= 1
+        want = 1.0 / LONGBENCH_LIKE.decode_p
+        assert abs(o.mean() - want) / want < 0.1
+
+    def test_longbench_prompts_longer_than_burstgpt(self):
+        rng = np.random.default_rng(0)
+        lb = prefill_sampler(LONGBENCH_LIKE)(rng, 5000).mean()
+        bg = prefill_sampler(BURSTGPT_LIKE)(rng, 5000).mean()
+        assert lb > 3 * bg
+
+    def test_spec_stats(self):
+        assert LONGBENCH_LIKE.sigma_s > 0
+        assert LONGBENCH_LIKE.mu_s > LONGBENCH_LIKE.s_min
+
+
+class TestTraces:
+    def test_poisson_rate(self):
+        tr = poisson_trace(LONGBENCH_LIKE, n_requests=5000, rate=100.0,
+                           seed=1)
+        times = np.array([r.arrival_time for r in tr.requests])
+        assert np.all(np.diff(times) >= 0)
+        emp_rate = len(times) / times[-1]
+        assert abs(emp_rate - 100.0) / 100.0 < 0.1
+
+    def test_bursty_has_higher_variance(self):
+        # short period so the trace actually alternates burst/lull episodes
+        tp = poisson_trace(BURSTGPT_LIKE, n_requests=3000, rate=50.0, seed=2)
+        tb = bursty_trace(BURSTGPT_LIKE, n_requests=3000, rate=50.0, seed=4,
+                          period=5.0)
+        def cv2(tr):
+            gaps = np.diff([r.arrival_time for r in tr.requests])
+            return gaps.var() / gaps.mean() ** 2
+        assert cv2(tb) > 1.5 * cv2(tp)
+
+    def test_overload_rate_overloads(self):
+        """Simulating at overload_rate keeps a growing wait queue."""
+        G, B = 4, 8
+        rate = overload_rate(LONGBENCH_LIKE, G, B, factor=2.0)
+        tr = poisson_trace(LONGBENCH_LIKE, n_requests=400, rate=rate, seed=3)
+        from repro.core import SimTrace
+        trace = SimTrace()
+        simulate(tr, make_policy("fcfs"),
+                 SimConfig(G=G, B=B, time_based_arrivals=True), trace=trace)
+        waiting = np.asarray(trace.n_waiting)
+        assert waiting.max() > G * B  # pool deeper than capacity
+
+    def test_batched_rounds_overloaded(self):
+        inst = batched_rounds_instance(LONGBENCH_LIKE, G=2, B=4, n_rounds=2)
+        assert len(inst) >= 2 * 2 * 4 * 2
+
+
+class TestTokenBatches:
+    def test_shapes_and_shift(self):
+        b = next(token_batches(vocab_size=100, batch=4, seq_len=16,
+                               n_batches=1, pad_frac=0.0))
+        assert b["tokens"].shape == (4, 16)
+        assert b["targets"].shape == (4, 16)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+    def test_mask_matches_padding(self):
+        b = next(token_batches(vocab_size=100, batch=8, seq_len=64,
+                               n_batches=1, pad_frac=0.2, seed=3))
+        assert b["mask"].min() == 0.0  # some padding present
+        np.testing.assert_array_equal(b["mask"] == 0, b["targets"] == 0)
+
+    def test_deterministic(self):
+        a = next(token_batches(vocab_size=50, batch=2, seq_len=8,
+                               n_batches=1, seed=7))
+        b = next(token_batches(vocab_size=50, batch=2, seq_len=8,
+                               n_batches=1, seed=7))
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])

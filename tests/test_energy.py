@@ -1,0 +1,97 @@
+"""Tests of the power/energy theory (Section 5.2, Theorem 4, Corollary 1)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    A100_POWER,
+    TPU_V5E_POWER,
+    PowerModel,
+    asymptotic_saving,
+    energy_decomposition,
+    energy_sandwich,
+    saving_bound,
+)
+
+
+class TestPowerModel:
+    def test_idle_and_peak(self):
+        pm = A100_POWER
+        assert pm.power(0.0) == pytest.approx(100.0)
+        assert pm.power(1.0) == pytest.approx(400.0)
+
+    def test_sublinear(self):
+        """gamma<1: power at u=0.5 exceeds the linear interpolation."""
+        pm = A100_POWER
+        lin = 100.0 + 300.0 * 0.5
+        assert pm.power(0.5) > lin
+
+    def test_monotone(self):
+        pm = A100_POWER
+        u = np.linspace(0, 1, 64)
+        p = pm.power(u)
+        assert np.all(np.diff(p) >= -1e-12)
+
+    def test_constants(self):
+        pm = A100_POWER
+        assert pm.c_gamma == pytest.approx(0.3 * 400 + 0.7 * 100)
+        assert pm.d_gamma == pytest.approx(0.3 * 300)
+
+
+class TestDecompositionIdentity:
+    def test_exact_identity_c47(self):
+        """E == kappa*(P_max W + P_idle ImbTot + (P_max-P_idle) X)."""
+        rng = np.random.default_rng(0)
+        pm = A100_POWER
+        loads = [rng.uniform(1, 10, size=8) for _ in range(50)]
+        d = energy_decomposition(loads, kappa_att=1e-7, pm=pm)
+        assert d["energy"] == pytest.approx(d["identity_rhs"], rel=1e-10)
+
+    def test_sandwich_c49(self):
+        rng = np.random.default_rng(1)
+        pm = A100_POWER
+        for _ in range(20):
+            loads = [rng.uniform(0.5, 20, size=16) for _ in range(30)]
+            d = energy_decomposition(loads, kappa_att=1e-7, pm=pm)
+            lo, hi = energy_sandwich(d["W"], d["ImbTot"], 1e-7, pm)
+            assert lo - 1e-9 <= d["energy"] <= hi + 1e-9
+
+    def test_x_bounds(self):
+        """0 <= X <= (1-gamma) * ImbTot (concavity tangent bound)."""
+        rng = np.random.default_rng(2)
+        pm = A100_POWER
+        loads = [rng.uniform(0.1, 5, size=12) for _ in range(40)]
+        d = energy_decomposition(loads, kappa_att=1.0, pm=pm)
+        assert -1e-9 <= d["X"] <= (1 - pm.gamma) * d["ImbTot"] + 1e-9
+
+    def test_balanced_loads_zero_imbalance(self):
+        pm = A100_POWER
+        loads = [np.full(8, 7.0) for _ in range(10)]
+        d = energy_decomposition(loads, kappa_att=1.0, pm=pm)
+        assert d["ImbTot"] == pytest.approx(0.0)
+        assert d["X"] == pytest.approx(0.0)
+        # all-ones utilization => P_max everywhere
+        assert d["energy"] == pytest.approx(1.0 * 7.0 * 8 * 400.0 * 10)
+
+
+class TestSavingBounds:
+    def test_corollary1_a100(self):
+        """100 / (0.3*400 + 0.7*100) = 100/190 ~ 52.6 % (Remark 2)."""
+        assert asymptotic_saving(A100_POWER) == pytest.approx(100.0 / 190.0)
+
+    def test_corollary1_tpu_preset(self):
+        s = asymptotic_saving(TPU_V5E_POWER)
+        assert 0.0 < s < 1.0
+
+    def test_saving_bound_monotone_alpha(self):
+        pm = A100_POWER
+        vals = [saving_bound(a, 0.4, pm) for a in [1.5, 3.0, 10.0, 100.0]]
+        assert all(np.diff(vals) > 0)
+
+    def test_saving_bound_alpha_one_is_zero(self):
+        assert saving_bound(1.0, 0.4, A100_POWER) == 0.0
+
+    def test_saving_bound_approaches_corollary(self):
+        """alpha -> inf and eta -> inf recovers Cor 1's limit."""
+        pm = A100_POWER
+        s = saving_bound(1e9, 1e9, pm)
+        assert s == pytest.approx(asymptotic_saving(pm), rel=1e-3)

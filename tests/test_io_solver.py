@@ -1,0 +1,130 @@
+"""Unit tests for the (IO) solver: feasibility, quality vs exact, and the
+s_max-balance / separation property the theory relies on."""
+import numpy as np
+import pytest
+
+from repro.core import io_solver
+
+
+def _rand_instance(rng, G=None, n=None, W=None):
+    G = G or int(rng.integers(2, 5))
+    n = n or int(rng.integers(1, 9))
+    W = W or int(rng.integers(1, 4))
+    base = rng.uniform(0, 10, size=(G, W))
+    caps = rng.integers(0, 4, size=G)
+    cands = rng.uniform(0, 5, size=(n, W))
+    return base, caps, cands
+
+
+def _check_feasible(base, caps, cands, assign, n_admit=None):
+    G = base.shape[0]
+    n = cands.shape[0]
+    assert assign.shape == (n,)
+    assert np.all((assign >= -1) & (assign < G))
+    used = np.bincount(assign[assign >= 0], minlength=G)
+    assert np.all(used <= caps), "capacity violated"
+    U = min(n, int(caps.sum())) if n_admit is None else n_admit
+    assert int((assign >= 0).sum()) == U, "full-utilization constraint"
+
+
+class TestGreedy:
+    def test_feasibility_random(self):
+        rng = np.random.default_rng(0)
+        for _ in range(100):
+            base, caps, cands = _rand_instance(rng)
+            a = io_solver.solve_greedy(base, caps, cands)
+            _check_feasible(base, caps, cands, a)
+
+    def test_zero_candidates(self):
+        a = io_solver.solve_greedy(np.zeros((3, 1)), np.array([1, 1, 1]),
+                                   np.zeros((0, 1)))
+        assert a.shape == (0,)
+
+    def test_zero_capacity(self):
+        a = io_solver.solve_greedy(np.zeros((2, 1)), np.array([0, 0]),
+                                   np.ones((4, 1)))
+        assert np.all(a == -1)
+
+    def test_single_worker_takes_all(self):
+        a = io_solver.solve_greedy(np.zeros((1, 1)), np.array([3]),
+                                   np.ones((3, 1)))
+        assert np.all(a == 0)
+
+    def test_balances_two_workers(self):
+        # two workers, four candidates 4,3,2,1 -> greedy LPT gives 4+1 / 3+2
+        base = np.zeros((2, 1))
+        caps = np.array([2, 2])
+        cands = np.array([[4.0], [3.0], [2.0], [1.0]])
+        a = io_solver.solve_io(base, caps, cands)
+        loads = np.zeros(2)
+        for i, g in enumerate(a):
+            loads[g] += cands[i, 0]
+        assert abs(loads[0] - loads[1]) <= 1.0
+
+
+class TestLocalSearchVsExact:
+    def test_near_optimal_small(self):
+        """Greedy + exchange is within the theory's G*W*s_max scale of the
+        exact optimum (Lemma 1's exchange argument bound)."""
+        rng = np.random.default_rng(1)
+        for _ in range(60):
+            base, caps, cands = _rand_instance(rng)
+            if caps.sum() == 0:
+                continue
+            a = io_solver.solve_io(base, caps, cands)
+            _check_feasible(base, caps, cands, a)
+            a_e, v_e = io_solver.solve_exact(base, caps, cands)
+            v = io_solver.objective(base, cands, a)
+            G, W = base.shape
+            assert v <= v_e + G * W * cands.max() + 1e-9
+
+    def test_local_search_never_worse(self):
+        rng = np.random.default_rng(2)
+        for _ in range(50):
+            base, caps, cands = _rand_instance(rng)
+            a0 = io_solver.solve_greedy(base, caps, cands)
+            a1 = io_solver.local_search(base, caps, cands, a0)
+            _check_feasible(base, caps, cands, a1)
+            assert (io_solver.objective(base, cands, a1)
+                    <= io_solver.objective(base, cands, a0) + 1e-9)
+
+
+class TestSmaxBalance:
+    def test_smax_balance_fresh_round(self):
+        """Lemma 1: filling G empty workers with G*B candidates, the
+        max-min per-worker load gap is <= s_max (+ slack for the heuristic)."""
+        rng = np.random.default_rng(3)
+        for trial in range(20):
+            G, B = 4, 8
+            s_max = 100.0
+            cands = rng.uniform(1, s_max, size=(G * B, 1))
+            base = np.zeros((G, 1))
+            caps = np.full(G, B)
+            a = io_solver.solve_io(base, caps, cands)
+            loads = np.zeros(G)
+            for i, g in enumerate(a):
+                assert g >= 0
+                loads[g] += cands[i, 0]
+            assert loads.max() - loads.min() <= 2.0 * s_max, trial
+
+    def test_objective_matches_manual(self):
+        base = np.array([[1.0], [2.0]])
+        cands = np.array([[3.0], [1.0]])
+        a = np.array([1, 0])
+        # loads = [2, 5]; J = 2*5 - 7 = 3
+        assert io_solver.objective(base, cands, a) == pytest.approx(3.0)
+
+
+class TestExact:
+    def test_exact_beats_or_ties_greedy(self):
+        rng = np.random.default_rng(4)
+        for _ in range(30):
+            base, caps, cands = _rand_instance(rng, G=2, n=5, W=1)
+            a_g = io_solver.solve_greedy(base, caps, cands)
+            a_e, v_e = io_solver.solve_exact(base, caps, cands)
+            assert v_e <= io_solver.objective(base, cands, a_g) + 1e-9
+
+    def test_exact_rejects_big(self):
+        with pytest.raises(ValueError):
+            io_solver.solve_exact(np.zeros((5, 1)), np.ones(5, dtype=int),
+                                  np.ones((20, 1)))

@@ -1,0 +1,142 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracles in repro.kernels.ref (assert_allclose)."""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.rms_norm import rms_norm_pallas
+from repro.kernels.ssm_scan import ssm_chunk_scan_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,hd,L,blk", [
+        (1, 2, 1, 32, 64, 32),       # MQA
+        (2, 4, 2, 64, 128, 64),      # GQA 2:1
+        (2, 8, 8, 64, 200, 128),     # MHA, ragged block tail
+        (1, 16, 2, 128, 1024, 512),  # big GQA, qwen-like head_dim
+        (3, 6, 6, 64, 96, 96),       # whisper-like
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, Hq, Hkv, hd, L, blk, dtype):
+        q = jnp.asarray(RNG.normal(size=(B, Hq, hd)), dtype)
+        k = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)), dtype)
+        v = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)), dtype)
+        lens = jnp.asarray(RNG.integers(1, L + 1, B), jnp.int32)
+        out = decode_attention_pallas(q, k, v, lens, blk_l=blk,
+                                      interpret=True)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    def test_length_one(self):
+        """Degenerate cache: only the new token itself is attended."""
+        B, Hq, hd, L = 2, 4, 32, 64
+        q = jnp.asarray(RNG.normal(size=(B, Hq, hd)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, L, Hq, hd)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, L, Hq, hd)), jnp.float32)
+        lens = jnp.ones((B,), jnp.int32)
+        out = decode_attention_pallas(q, k, v, lens, blk_l=32)
+        # softmax over a single position == that position's value
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(v[:, 0]), atol=1e-5)
+
+    def test_matches_model_oracle(self):
+        """kernels.ref == models.attention.decode_attention (two oracles)."""
+        from repro.models.attention import decode_attention as model_da
+        B, Hq, Hkv, hd, L = 2, 8, 4, 64, 128
+        q = jnp.asarray(RNG.normal(size=(B, Hq, hd)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)), jnp.float32)
+        lens = jnp.asarray([60, 128], jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(ref.decode_attention_ref(q, k, v, lens)),
+            np.asarray(model_da(q, k, v, lens)), atol=1e-5)
+
+
+class TestSSMScan:
+    @pytest.mark.parametrize("B,S,H,dk,dv,chunk", [
+        (1, 32, 1, 8, 8, 16),
+        (2, 64, 3, 16, 8, 16),
+        (2, 128, 2, 64, 64, 128),    # mamba2-like (N=64, headdim=64)
+        (1, 48, 4, 32, 33, 16),      # mLSTM-like with +1 normalizer col
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, S, H, dk, dv, chunk, dtype):
+        q = jnp.asarray(RNG.normal(size=(B, S, H, dk)), dtype)
+        k = jnp.asarray(RNG.normal(size=(B, S, H, dk)), dtype)
+        v = jnp.asarray(RNG.normal(size=(B, S, H, dv)), dtype)
+        a = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+        g = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+        y, s = ssm_chunk_scan_pallas(q, k, v, a, g, chunk=chunk,
+                                     interpret=True)
+        y0, s0 = ref.ssm_chunk_scan_ref(q, k, v, a, g)
+        tol = dict(atol=1e-1, rtol=1e-1) if dtype == jnp.bfloat16 \
+            else dict(atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y0, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s0),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_ragged_pad_path_via_ops(self):
+        """ops.ssm_chunk_scan pads S to the chunk size correctly."""
+        B, S, H, dk, dv = 2, 37, 2, 8, 8
+        q = jnp.asarray(RNG.normal(size=(B, S, H, dk)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, S, H, dk)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, S, H, dv)), jnp.float32)
+        a = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+        g = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+        y, _ = ops.ssm_chunk_scan(q, k, v, a, g, use_pallas=True, chunk=16)
+        y0, _ = ref.ssm_chunk_scan_ref(q, k, v, a, g)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_matches_model_core(self):
+        """Chunked jnp core used by the models == the kernel oracle."""
+        from repro.models.ssm import chunked_linear_attention
+        B, S, H, dk, dv = 2, 40, 2, 8, 8
+        q = jnp.asarray(RNG.normal(size=(B, S, H, dk)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, S, H, dk)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, S, H, dv)), jnp.float32)
+        a = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+        g = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+        y1, s1 = chunked_linear_attention(q, k, v, a, g, chunk=8)
+        y0, s0 = ref.ssm_chunk_scan_ref(q, k, v, a, g)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 32), (2, 7, 96), (1, 128),
+                                       (5, 3, 2, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, shape, dtype):
+        x = jnp.asarray(RNG.normal(size=shape), dtype)
+        sc = jnp.asarray(RNG.normal(size=shape[-1:]), jnp.float32)
+        out = rms_norm_pallas(x, sc, interpret=True)
+        want = ref.rms_norm_ref(x, sc)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+    def test_matches_model_layer(self):
+        from repro.models.layers import rms_norm as model_rms
+        x = jnp.asarray(RNG.normal(size=(4, 64)), jnp.float32)
+        sc = jnp.asarray(RNG.normal(size=(64,)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(ref.rms_norm_ref(x, sc)),
+                                   np.asarray(model_rms(x, sc)), atol=1e-6)

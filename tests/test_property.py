@@ -1,0 +1,199 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    A100_POWER,
+    ArrivalInstance,
+    PowerModel,
+    Request,
+    SimConfig,
+    energy_decomposition,
+    energy_sandwich,
+    io_solver,
+    make_policy,
+    simulate,
+    step_imbalance,
+)
+from repro.core.workload import constant_drift, fractional_drift, unit_drift
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+sizes = st.integers(min_value=1, max_value=60)
+
+
+@st.composite
+def io_instances(draw):
+    G = draw(st.integers(2, 5))
+    n = draw(st.integers(1, 12))
+    W = draw(st.integers(1, 4))
+    base = np.array(draw(st.lists(
+        st.lists(st.floats(0, 100), min_size=W, max_size=W),
+        min_size=G, max_size=G)))
+    caps = np.array(draw(st.lists(st.integers(0, 4), min_size=G,
+                                  max_size=G)))
+    cands = np.array(draw(st.lists(
+        st.lists(st.floats(0, 50), min_size=W, max_size=W),
+        min_size=n, max_size=n)))
+    return base, caps, cands
+
+
+@st.composite
+def arrival_instances(draw):
+    n = draw(st.integers(2, 40))
+    drift = draw(st.sampled_from([unit_drift(), constant_drift(),
+                                  fractional_drift(0.3)]))
+    reqs = [
+        Request(rid=i,
+                arrival_step=draw(st.integers(0, 10)),
+                prefill=float(draw(st.integers(1, 100))),
+                decode_len=draw(st.integers(1, 20)))
+        for i in range(n)
+    ]
+    return ArrivalInstance(requests=reqs, drift=drift)
+
+
+# ---------------------------------------------------------------------------
+# IO solver invariants
+# ---------------------------------------------------------------------------
+
+class TestIOSolverProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(io_instances())
+    def test_feasibility(self, inst):
+        base, caps, cands = inst
+        a = io_solver.solve_io(base, caps, cands)
+        G, n = base.shape[0], cands.shape[0]
+        assert np.all((a >= -1) & (a < G))
+        used = np.bincount(a[a >= 0], minlength=G)
+        assert np.all(used <= caps)
+        assert (a >= 0).sum() == min(n, caps.sum())
+
+    @settings(max_examples=40, deadline=None)
+    @given(io_instances())
+    def test_local_search_monotone(self, inst):
+        base, caps, cands = inst
+        a0 = io_solver.solve_greedy(base, caps, cands)
+        a1 = io_solver.local_search(base, caps, cands, a0)
+        assert (io_solver.objective(base, cands, a1)
+                <= io_solver.objective(base, cands, a0) + 1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(io_instances())
+    def test_objective_lower_bound(self, inst):
+        """J >= sum_h (G*mean - sum) = 0-centered bound: J is always >= 0
+        and >= the imbalance of a perfectly balanced assignment."""
+        base, caps, cands = inst
+        a = io_solver.solve_io(base, caps, cands)
+        assert io_solver.objective(base, cands, a) >= -1e-9
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+
+class TestSimulatorProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(arrival_instances(), st.sampled_from(["fcfs", "jsq", "bfio_h0",
+                                                 "bfio_h4"]))
+    def test_completion_and_stickiness(self, inst, policy):
+        m = simulate(inst, make_policy(policy), SimConfig(G=3, B=4))
+        assert m.completed == len(inst)
+        for r in inst.requests:
+            assert 0 <= r.worker < 3
+            # sticky: processed for exactly decode_len consecutive steps
+            assert r.finish_step - r.assign_step == r.decode_len - 1
+
+    @settings(max_examples=10, deadline=None)
+    @given(arrival_instances())
+    def test_work_conservation_across_policies(self, inst):
+        """Eq. (11): total processed work is policy-independent."""
+        from repro.core import SimTrace
+        totals = []
+        for policy in ["fcfs", "bfio_h0"]:
+            tr = SimTrace()
+            cfg = SimConfig(G=3, B=4)
+            simulate(inst, make_policy(policy), cfg, trace=tr)
+            totals.append(float(np.sum(np.asarray(tr.mean_load) * cfg.G)))
+        assert totals[0] == pytest.approx(totals[1], rel=1e-9)
+        assert totals[0] == pytest.approx(inst.total_work(), rel=1e-9)
+
+    @settings(max_examples=10, deadline=None)
+    @given(arrival_instances())
+    def test_makespan_at_least_critical_path(self, inst):
+        """No policy can finish faster than the longest single request."""
+        cfg = SimConfig(G=3, B=4, step_overhead=1.0, t_token=0.0)
+        m = simulate(inst, make_policy("bfio_h0"), cfg)
+        longest = max(r.decode_len for r in inst.requests)
+        assert m.steps >= longest
+
+
+# ---------------------------------------------------------------------------
+# energy model invariants
+# ---------------------------------------------------------------------------
+
+class TestEnergyProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.lists(st.floats(0.01, 100), min_size=4, max_size=4),
+                    min_size=1, max_size=30),
+           st.floats(0.1, 0.9))
+    def test_identity_and_sandwich(self, loads, gamma):
+        pm = PowerModel(p_idle=100, p_max=400, gamma=gamma)
+        loads = [np.asarray(l) for l in loads]
+        d = energy_decomposition(loads, kappa_att=1e-3, pm=pm)
+        assert d["energy"] == pytest.approx(d["identity_rhs"], rel=1e-9)
+        lo, hi = energy_sandwich(d["W"], d["ImbTot"], 1e-3, pm)
+        assert lo - 1e-6 <= d["energy"] <= hi + 1e-6
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.floats(0.0, 1000.0), min_size=2, max_size=16))
+    def test_imbalance_nonnegative_and_zero_iff_balanced(self, loads):
+        loads = np.asarray(loads)
+        imb = step_imbalance(loads)
+        assert imb >= -1e-9
+        if np.allclose(loads, loads[0]):
+            assert imb == pytest.approx(0.0, abs=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(0.0, 1.0), st.floats(0.05, 0.95))
+    def test_power_between_idle_and_max(self, u, gamma):
+        pm = PowerModel(gamma=gamma)
+        p = float(pm.power(u))
+        assert pm.p_idle - 1e-9 <= p <= pm.p_max + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# balancer_jax consistency with the numpy solver
+# ---------------------------------------------------------------------------
+
+class TestJaxBalancer:
+    @settings(max_examples=15, deadline=None)
+    @given(io_instances())
+    def test_jax_matches_numpy_quality(self, inst):
+        import jax.numpy as jnp
+        from repro.core.balancer_jax import bfio_assign
+        base, caps, cands = inst
+        n = cands.shape[0]
+        a_np = io_solver.solve_io(base, caps, cands)
+        a_jx = np.asarray(bfio_assign(
+            jnp.asarray(base), jnp.asarray(caps, jnp.int32),
+            jnp.asarray(cands), jnp.ones(n, bool),
+            jnp.int32(min(n, int(caps.sum())))))
+        # feasibility
+        G = base.shape[0]
+        used = np.bincount(a_jx[a_jx >= 0], minlength=G)
+        assert np.all(used <= caps)
+        assert (a_jx >= 0).sum() == min(n, int(caps.sum()))
+        # quality within the exchange-argument scale of the numpy solver
+        v_np = io_solver.objective(base, cands, a_np)
+        v_jx = io_solver.objective(base, cands, a_jx)
+        W = base.shape[1]
+        slack = G * W * (cands.max() if cands.size else 0.0) + 1e-6
+        assert v_jx <= v_np + slack
