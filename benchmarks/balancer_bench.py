@@ -1,0 +1,238 @@
+"""Balancer + simulator hot-path benchmark -> BENCH_balancer.json.
+
+Tracks the two hot paths this repo's scale story rests on, with the
+pre-optimization implementations measured live (they are kept in-tree
+precisely for this):
+
+* **solver** — jitted BF-IO solve time, pre = ``method="dense"`` (the
+  original O(N^2 W) ``_swap_once`` formulation) vs post = the tiled
+  swap kernel with top-K candidate pruning (``method="xla"``,
+  ``prune_k``).  Assignment quality (windowed imbalance J) is recorded
+  for both so the speed/quality trade stays visible.
+* **simulator** — instant-mode steps/sec, pre = ``dispatch="instant_ref"``
+  (the original per-request Python loop) vs post = the vectorized
+  ``dispatch="instant"`` path, with a bit-equality check on SimMetrics.
+* **batch** — ``bfio_assign_batch`` (one vmapped call over C clusters)
+  vs C sequential ``bfio_assign`` calls.
+
+Run:  PYTHONPATH=src python -m benchmarks.balancer_bench [--full] [--smoke]
+Writes BENCH_balancer.json at the repo root (and benchmarks/results/).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SWAP_ITERS = 8
+PRUNE_K = 128
+W = 9  # lookahead window H=8
+
+
+def _solver_case(G: int, N: int, *, measure_dense: bool, iters: int = 10,
+                 seed: int = 0) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import io_solver
+    from repro.core.balancer_jax import bfio_assign
+
+    rng = np.random.default_rng(seed)
+    base = jnp.asarray(rng.uniform(0, 100, (G, W)), jnp.float32)
+    caps = jnp.asarray(rng.integers(4, 16, (G,)), jnp.int32)
+    cands = jnp.asarray(rng.uniform(1, 50, (N, W)), jnp.float32)
+    valid = jnp.ones((N,), bool)
+    n_admit = jnp.int32(min(N, int(np.asarray(caps).sum())))
+
+    def timed(swap_iters=SWAP_ITERS, **kw):
+        def call():
+            return bfio_assign(base, caps, cands, valid, n_admit,
+                               swap_iters=swap_iters, **kw)
+        a = np.asarray(call())  # warmup/compile
+        t0 = time.time()
+        for _ in range(iters):
+            call().block_until_ready()
+        us = (time.time() - t0) / iters * 1e6
+        J = io_solver.objective(np.asarray(base), np.asarray(cands), a)
+        return us, J
+
+    prune = min(PRUNE_K, N)
+    post_us, J_post = timed(method="xla", prune_k=prune)
+    greedy_us, _ = timed(swap_iters=0)  # construction-only floor
+    row = {"section": "solver", "G": G, "N": N, "W": W,
+           "swap_iters": SWAP_ITERS, "prune_k": prune,
+           "post_tiled_us": post_us, "J_post": J_post,
+           "greedy_us": greedy_us,
+           "pre_dense_us": None, "J_pre": None, "speedup": None,
+           "refine_speedup": None, "quality_rel_diff": None}
+    if measure_dense:
+        pre_us, J_pre = timed(method="dense")
+        # refinement-only ratio: subtract the shared greedy construction,
+        # which no swap backend touches
+        pre_ref = max(pre_us - greedy_us, 1e-9)
+        post_ref = max(post_us - greedy_us, 1e-9)
+        row.update(pre_dense_us=pre_us, J_pre=J_pre,
+                   speedup=pre_us / post_us,
+                   refine_speedup=pre_ref / post_ref,
+                   quality_rel_diff=(J_post - J_pre) / max(abs(J_pre), 1e-9))
+    return row
+
+
+def _sim_instance(G: int, B: int, n_rounds: float, seed: int = 1):
+    from repro.core import ArrivalInstance, Request
+
+    rng = np.random.default_rng(seed)
+    n = int(G * B * n_rounds)
+    reqs = [
+        Request(rid=i, arrival_step=int(rng.integers(0, 50)),
+                prefill=float(rng.integers(1, 80)),
+                decode_len=int(rng.geometric(0.1)))
+        for i in range(n)
+    ]
+    return ArrivalInstance(requests=reqs)
+
+
+def _sim_case(G: int, B: int, *, n_rounds: float = 4.0, policy: str = "jsq",
+              seed: int = 1) -> dict:
+    from repro.core import SimConfig, make_policy, simulate
+
+    out = {"section": "simulator", "G": G, "B": B, "policy": policy}
+    metrics = {}
+    for mode, key in [("instant_ref", "pre"), ("instant", "post")]:
+        inst = _sim_instance(G, B, n_rounds, seed=seed)
+        t0 = time.time()
+        m = simulate(inst, make_policy(policy),
+                     SimConfig(G=G, B=B, dispatch=mode, max_steps=500_000))
+        wall = time.time() - t0
+        metrics[key] = dataclasses.asdict(m)
+        out[f"{key}_steps_per_s"] = m.steps / max(wall, 1e-9)
+        out[f"{key}_wall_s"] = wall
+        out["steps"] = m.steps
+    out["speedup"] = out["post_steps_per_s"] / out["pre_steps_per_s"]
+    out["metrics_equal"] = metrics["pre"] == metrics["post"]
+    return out
+
+
+def _batch_case(C: int, G: int, N: int, iters: int = 5, seed: int = 2) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core.balancer_jax import bfio_assign, bfio_assign_batch
+
+    rng = np.random.default_rng(seed)
+    base = jnp.asarray(rng.uniform(0, 100, (C, G, W)), jnp.float32)
+    caps = jnp.asarray(rng.integers(4, 16, (C, G)), jnp.int32)
+    cands = jnp.asarray(rng.uniform(1, 50, (C, N, W)), jnp.float32)
+    valid = jnp.ones((C, N), bool)
+    n_admit = jnp.minimum(N, caps.sum(axis=1)).astype(jnp.int32)
+
+    prune = min(PRUNE_K, N)
+    bfio_assign_batch(base, caps, cands, valid, n_admit,
+                      prune_k=prune).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        bfio_assign_batch(base, caps, cands, valid, n_admit,
+                          prune_k=prune).block_until_ready()
+    batch_us = (time.time() - t0) / iters * 1e6
+
+    def seq():
+        for c in range(C):
+            bfio_assign(base[c], caps[c], cands[c], valid[c], n_admit[c],
+                        prune_k=prune).block_until_ready()
+    seq()  # warmup
+    t0 = time.time()
+    for _ in range(iters):
+        seq()
+    seq_us = (time.time() - t0) / iters * 1e6
+    return {"section": "batch", "C": C, "G": G, "N": N, "W": W,
+            "prune_k": prune, "batch_us": batch_us, "sequential_us": seq_us,
+            "speedup": seq_us / batch_us}
+
+
+def run(full: bool = False, smoke: bool = False,
+        out_path: str | None = None) -> dict:
+    if smoke:
+        solver_grid = [(4, 16)]
+        sim_grid = [(8, 4)]
+        batch_grid = [(2, 4, 8)]
+        n_rounds, iters = 2.0, 2
+    else:
+        solver_grid = [(G, N) for G in (64, 256, 1024)
+                       for N in (64, 512, 2048)]
+        sim_grid = [(64, 72), (256, 72), (1024, 72)]
+        batch_grid = [(8, 64, 256)]
+        n_rounds, iters = 4.0, 10
+
+    rows = []
+    for G, N in solver_grid:
+        # the dense baseline materializes (N, N, W) f32 tensors; skip it at
+        # N=2048 (>150 MB per temporary) unless --full
+        dense_ok = N <= 512 or full
+        r = _solver_case(G, N, measure_dense=dense_ok,
+                         iters=max(2, iters // (1 + N // 512)))
+        rows.append(r)
+        pre = f"{r['pre_dense_us']/1e3:8.1f}ms" if r["pre_dense_us"] else "    n/a "
+        print(f"  solver G={G:<5d} N={N:<5d} pre={pre} "
+              f"post={r['post_tiled_us']/1e3:8.1f}ms "
+              f"speedup={r['speedup'] or float('nan'):5.1f}x "
+              f"(refine-only {r['refine_speedup'] or float('nan'):5.1f}x) "
+              f"dJ={r['quality_rel_diff'] if r['quality_rel_diff'] is not None else float('nan'):+.3%}",
+              flush=True)
+    for G, B in sim_grid:
+        r = _sim_case(G, B, n_rounds=n_rounds)
+        rows.append(r)
+        print(f"  sim    G={G:<5d} B={B:<3d} pre={r['pre_steps_per_s']:8.0f} "
+              f"post={r['post_steps_per_s']:8.0f} steps/s "
+              f"speedup={r['speedup']:5.1f}x equal={r['metrics_equal']}",
+              flush=True)
+    for C, G, N in batch_grid:
+        r = _batch_case(C, G, N, iters=iters)
+        rows.append(r)
+        print(f"  batch  C={C} G={G} N={N} batch={r['batch_us']/1e3:.1f}ms "
+              f"seq={r['sequential_us']/1e3:.1f}ms speedup={r['speedup']:.1f}x",
+              flush=True)
+
+    doc = {
+        "meta": {
+            "bench": "balancer",
+            "smoke": smoke,
+            "W": W,
+            "swap_iters": SWAP_ITERS,
+            "prune_k": PRUNE_K,
+            "pre": "method='dense' solver / dispatch='instant_ref' simulator "
+                   "(the pre-optimization implementations, kept in-tree)",
+            "post": "tiled swap kernel with top-K pruning / vectorized "
+                    "instant dispatch",
+        },
+        "rows": rows,
+    }
+    if out_path is None and smoke:
+        # never clobber the tracked full-grid artifact with smoke numbers
+        out_path = os.path.join(tempfile.mkdtemp(prefix="bench_smoke_"),
+                                "BENCH_balancer.json")
+    path = out_path or os.path.join(ROOT, "BENCH_balancer.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"  wrote {path}")
+    if not smoke:
+        from .common import save_rows
+        save_rows("balancer_bench", rows, meta=doc["meta"])
+    return doc
+
+
+def main(full: bool = False, smoke: bool = False):
+    run(full=full, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also measure the dense baseline at N=2048")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, schema check only")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,75 @@
+"""Perf-harness smoke check: run the balancer benchmark on tiny shapes and
+validate the emitted JSON schema and that every timing is finite/positive.
+
+Wired into tier-1 (tests/test_bench_smoke.py) so bit-rot in the benchmark
+harness is caught by the test suite, not at the next perf investigation.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.check_bench
+"""
+from __future__ import annotations
+
+import math
+import os
+import tempfile
+
+SOLVER_KEYS = {"G", "N", "W", "swap_iters", "prune_k", "post_tiled_us",
+               "J_post", "greedy_us", "pre_dense_us", "J_pre", "speedup",
+               "refine_speedup", "quality_rel_diff"}
+SIM_KEYS = {"G", "B", "policy", "pre_steps_per_s", "post_steps_per_s",
+            "pre_wall_s", "post_wall_s", "steps", "speedup", "metrics_equal"}
+BATCH_KEYS = {"C", "G", "N", "W", "prune_k", "batch_us", "sequential_us",
+              "speedup"}
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def check(doc: dict) -> None:
+    """Raise AssertionError on any schema/sanity violation."""
+    assert set(doc) >= {"meta", "rows"}, "missing meta/rows"
+    meta = doc["meta"]
+    assert meta.get("bench") == "balancer"
+    rows = doc["rows"]
+    assert rows, "no benchmark rows"
+    sections = {r.get("section") for r in rows}
+    assert sections >= {"solver", "simulator", "batch"}, sections
+    for r in rows:
+        sec = r["section"]
+        if sec == "solver":
+            assert SOLVER_KEYS <= set(r), SOLVER_KEYS - set(r)
+            assert _finite_pos(r["post_tiled_us"])
+            assert math.isfinite(r["J_post"])
+            if r["pre_dense_us"] is not None:
+                assert _finite_pos(r["pre_dense_us"])
+                assert _finite_pos(r["speedup"])
+                assert math.isfinite(r["quality_rel_diff"])
+        elif sec == "simulator":
+            assert SIM_KEYS <= set(r), SIM_KEYS - set(r)
+            assert _finite_pos(r["pre_steps_per_s"])
+            assert _finite_pos(r["post_steps_per_s"])
+            assert r["metrics_equal"] is True, \
+                "vectorized simulator diverged from the reference"
+        elif sec == "batch":
+            assert BATCH_KEYS <= set(r), BATCH_KEYS - set(r)
+            assert _finite_pos(r["batch_us"])
+            assert _finite_pos(r["sequential_us"])
+
+
+def run_smoke() -> dict:
+    """Run the balancer bench on tiny shapes, validate, return the doc."""
+    from .balancer_bench import run
+
+    with tempfile.TemporaryDirectory() as d:
+        doc = run(smoke=True, out_path=os.path.join(d, "BENCH_balancer.json"))
+    check(doc)
+    return doc
+
+
+def main():
+    run_smoke()
+    print("check_bench: smoke run OK (schema valid, timings finite)")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,8 +21,9 @@ from .common import print_csv, save_rows
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    # warmup (compile) once, then block on the single result
+    out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)

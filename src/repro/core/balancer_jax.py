@@ -5,8 +5,41 @@ a pure-``jax.lax`` implementation with static shapes so the balance step can
 be fused into a device-side serving loop (or dispatched per-step without
 host round-trips).  Construction is greedy LPT (a ``fori_loop`` over
 candidates in size order); refinement is a fixed number of best-improving
-pairwise swap iterations (the exchange argument of the proofs, vectorized
-over all candidate pairs with a top-3 exclusion trick).
+pairwise swap iterations (the exchange argument of the proofs).
+
+Refinement backends
+-------------------
+The swap search dominates solve cost.  Three interchangeable backends
+compute the identical best-improving pair per iteration (see
+``repro.kernels.bfio_swap`` for the math):
+
+* ``method="dense"`` — the original formulation: materialize the full
+  (N, N, W) post-swap tensor and take a flat argmin.  O(N^2 W) memory
+  per iteration; kept as the measured pre-optimization baseline and
+  small-instance oracle.
+* ``method="xla"`` (default) — the same reduction tiled over candidate
+  row blocks (``lax.map``, peak memory O(TILE * N * W)); the production
+  CPU path.
+* ``method="pallas"`` — a Pallas kernel on a (N/TILE_I, N/TILE_J) grid
+  with the running per-row argmin carried in the revisited output block,
+  so no pairwise tensor is ever materialized; interpret mode off-TPU.
+
+Candidate pruning
+-----------------
+``prune_k=K`` restricts the swap search to the top-K admitted candidates
+by windowed contribution (sum over the lookahead window).  Exchanging two
+admitted candidates never changes *which* candidates are admitted, so the
+pruned set is computed once per solve and refinement permutes assignments
+within it: pair-search cost drops from N^2 to K^2 per iteration.  Small
+candidates move the windowed max least, so quality loss is bounded and
+measured (see benchmarks/balancer_bench.py); ``prune_k=None`` keeps the
+search exact.
+
+Batched solving
+---------------
+``bfio_assign_batch`` vmaps the whole solve over a leading cluster axis —
+independent (base, caps, cands) instances solved in one compiled call for
+fleet-scale sweeps (G up to 1024, thousands of candidates).
 
 Shapes (static under jit):
     base  : (G, W) f32   predicted resident-load trajectories, W = H+1
@@ -23,7 +56,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bfio_assign", "windowed_imbalance"]
+from ..kernels.bfio_swap import swap_best_pallas, swap_best_xla
+
+__all__ = ["bfio_assign", "bfio_assign_batch", "windowed_imbalance"]
 
 
 def windowed_imbalance(loads: jnp.ndarray) -> jnp.ndarray:
@@ -67,8 +102,12 @@ def _greedy(base, caps, cands, valid, n_admit):
     return loads, caps_left, assign
 
 
-def _swap_once(loads, cands, assign, valid):
-    """One best-improving pairwise swap over all admitted candidate pairs."""
+def _swap_once_dense(loads, cands, assign, valid):
+    """One best-improving pairwise swap, dense O(N^2 W) formulation.
+
+    The pre-optimization baseline: materializes every pairwise post-swap
+    trajectory at once.  Semantically identical to the tiled backends.
+    """
     G, W = loads.shape
     N = cands.shape[0]
     admitted = (assign >= 0) & valid
@@ -103,11 +142,16 @@ def _swap_once(loads, cands, assign, valid):
     val = mx.sum(axis=2)                           # (N, N)
     feasible = (admitted[:, None] & admitted[None, :]
                 & (ga != gb))
-    cur = loads.max(axis=0).sum()
     val = jnp.where(feasible, val, jnp.inf)
     flat = jnp.argmin(val)
     bi, bj = jnp.unravel_index(flat, val.shape)
-    improve = val[bi, bj] < cur - 1e-6
+    return _apply_best(loads, cands, assign, val[bi, bj], bi, bj)
+
+
+def _apply_best(loads, cands, assign, best_val, bi, bj):
+    """Apply the swap (bi, bj) iff it improves the windowed max-sum."""
+    cur = loads.max(axis=0).sum()
+    improve = best_val < cur - 1e-6
 
     def apply(args):
         loads, assign = args
@@ -123,17 +167,102 @@ def _swap_once(loads, cands, assign, valid):
     return loads, assign, improve
 
 
-@functools.partial(jax.jit, static_argnames=("swap_iters",))
-def bfio_assign(base, caps, cands, valid, n_admit, swap_iters: int = 8):
-    """Jitted BF-IO assignment (greedy + fixed-budget swap refinement)."""
-    base = jnp.asarray(base, dtype=jnp.float32)
-    cands = jnp.asarray(cands, dtype=jnp.float32)
-    loads, caps_left, assign = _greedy(base, caps, cands, valid, n_admit)
+def _swap_once_tiled(loads, cands, assign, valid, *, method, tile, interpret):
+    """One best-improving swap via the tiled (blockwise-argmin) backends."""
+    if method == "pallas":
+        vals, args = swap_best_pallas(loads, cands, assign, valid,
+                                      tile_i=tile, tile_j=tile,
+                                      interpret=interpret)
+    else:
+        vals, args = swap_best_xla(loads, cands, assign, valid, tile_i=tile)
+    bi = jnp.argmin(vals)
+    bj = args[bi]
+    return _apply_best(loads, cands, assign, vals[bi], bi, bj)
+
+
+def _refine(loads, assign, cands, valid, *, swap_iters, method, tile,
+            prune_k, interpret):
+    """Fixed-budget swap refinement, optionally in a pruned top-K subspace.
+
+    Swaps exchange two *admitted* candidates, so the admitted set is
+    invariant under refinement and the top-K pool can be picked once.
+    """
+    N = cands.shape[0]
+    if method == "dense":
+        def body(_, carry):
+            loads, assign = carry
+            loads, assign, _ = _swap_once_dense(loads, cands, assign, valid)
+            return loads, assign
+        return jax.lax.fori_loop(0, swap_iters, body, (loads, assign))
+
+    if prune_k is not None and prune_k <= 0:
+        return loads, assign                # empty swap pool: nothing to do
+    if prune_k is not None and prune_k < N:
+        admitted = (assign >= 0) & valid
+        totals = jnp.where(admitted, cands.sum(axis=1), -jnp.inf)
+        _, pool = jax.lax.top_k(totals, prune_k)            # (K,)
+        sub_cands = cands[pool]
+        sub_valid = valid[pool]
+        sub_assign = assign[pool]
+
+        def body(_, carry):
+            loads, sub_assign = carry
+            loads, sub_assign, _ = _swap_once_tiled(
+                loads, sub_cands, sub_assign, sub_valid,
+                method=method, tile=tile, interpret=interpret)
+            return loads, sub_assign
+
+        loads, sub_assign = jax.lax.fori_loop(0, swap_iters, body,
+                                              (loads, sub_assign))
+        return loads, assign.at[pool].set(sub_assign)
 
     def body(_, carry):
         loads, assign = carry
-        loads, assign, _ = _swap_once(loads, cands, assign, valid)
+        loads, assign, _ = _swap_once_tiled(
+            loads, cands, assign, valid,
+            method=method, tile=tile, interpret=interpret)
         return loads, assign
 
-    loads, assign = jax.lax.fori_loop(0, swap_iters, body, (loads, assign))
+    return jax.lax.fori_loop(0, swap_iters, body, (loads, assign))
+
+
+@functools.partial(jax.jit, static_argnames=("swap_iters", "method", "tile",
+                                             "prune_k", "interpret"))
+def bfio_assign(base, caps, cands, valid, n_admit, swap_iters: int = 8,
+                *, method: str = "xla", tile: int = 128,
+                prune_k: int | None = None, interpret: bool = True):
+    """Jitted BF-IO assignment (greedy + fixed-budget swap refinement).
+
+    ``method`` selects the swap-search backend ("xla" | "pallas" |
+    "dense"), ``tile`` the block size, ``prune_k`` the optional top-K
+    candidate pruning, ``interpret`` the Pallas interpret mode (keep True
+    off-TPU).  All backends return identical assignments for the same
+    inputs; ``prune_k`` trades a measured sliver of objective for a K^2/N^2
+    reduction in pair-search cost.
+    """
+    base = jnp.asarray(base, dtype=jnp.float32)
+    cands = jnp.asarray(cands, dtype=jnp.float32)
+    loads, caps_left, assign = _greedy(base, caps, cands, valid, n_admit)
+    loads, assign = _refine(loads, assign, cands, valid,
+                            swap_iters=swap_iters, method=method, tile=tile,
+                            prune_k=prune_k, interpret=interpret)
     return assign
+
+
+@functools.partial(jax.jit, static_argnames=("swap_iters", "method", "tile",
+                                             "prune_k"))
+def bfio_assign_batch(base, caps, cands, valid, n_admit, swap_iters: int = 8,
+                      *, method: str = "xla", tile: int = 128,
+                      prune_k: int | None = None):
+    """Batched BF-IO: solve C independent cluster instances in one call.
+
+    Shapes carry a leading cluster axis: base (C, G, W), caps (C, G),
+    cands (C, N, W), valid (C, N), n_admit (C,).  Returns (C, N) i32.
+    Uses the XLA tiled backend (vmap-compatible); intended for fleet
+    sweeps where many clusters are balanced per barrier step.
+    """
+    if method == "pallas":  # pallas_call batching is not wired up
+        method = "xla"
+    solve = functools.partial(bfio_assign, swap_iters=swap_iters,
+                              method=method, tile=tile, prune_k=prune_k)
+    return jax.vmap(solve)(base, caps, cands, valid, n_admit)

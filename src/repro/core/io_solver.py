@@ -91,8 +91,6 @@ def solve_greedy(
         if admitted >= U:
             break
         c = cands[i]                          # (W,)
-        #
-
         # score of placing i on worker g: sum_h max(top1_excluding_g, loads[g]+c)
         top1 = loads.max(axis=0)              # (W,)
         arg1 = loads.argmax(axis=0)           # (W,)
@@ -177,57 +175,63 @@ def local_search(
     cur = J(loads)
     for _ in range(max_iters):
         order = np.argsort(-loads.sum(axis=1))
+        # Everything below is invariant across the p-loop (loads/assign only
+        # change when a move is applied, which restarts the outer loop), so
+        # gather the move-target pools and top-3 exclusion tables once and
+        # mask per-p instead of re-compacting per worker.
+        val, idx = top3(loads)
+        tot = loads.sum(axis=0)
+        gs_all = np.nonzero(resid > 0)[0]                   # relocate targets
+        lg_all = loads[gs_all]                              # (ng, W)
+        Ja = np.nonzero(assign >= 0)[0]                     # admitted pool
+        ga = assign[Ja]                                     # (na,)
+        ca = cands[Ja]                                      # (na, W)
+        la = loads[ga]                                      # (na, W)
+        Jw = np.nonzero(assign < 0)[0][:max_wait_considered]
+        cw = cands[Jw]                                      # (nw, W)
         applied = False
         for p in order:
             p = int(p)
             Ip = np.nonzero(assign == p)[0]
             if len(Ip) == 0:
                 continue
-            val, idx = top3(loads)
             lp = loads[p]
-            tot = loads.sum(axis=0)
             cp = cands[Ip]                                  # (np_, W)
             best = (cur - 1e-9, None)
 
-            # 1. relocate i in Ip -> worker g with resid > 0
-            gs = np.nonzero(resid > 0)[0]
-            gs = gs[gs != p]
-            if len(gs) > 0:
+            # 1. relocate i in Ip -> worker g with resid > 0 (g == p masked)
+            if len(gs_all) > 0:
                 lp_new = lp[None, None, :] - cp[:, None, :]        # (np_,1,W)
-                lg_new = loads[gs][None, :, :] + cp[:, None, :]    # (np_,ng,W)
-                ex = excl_two(val, idx, np.full((1, len(gs), 1), p),
-                              gs.reshape(1, -1, 1))                # (1,ng,W)
+                lg_new = lg_all[None, :, :] + cp[:, None, :]       # (np_,ng,W)
+                ex = excl_two(val, idx, p, gs_all.reshape(1, -1, 1))
                 mx = np.maximum(ex, np.maximum(lp_new, lg_new))
                 vals = (G * mx - tot[None, None, :]).sum(axis=2)   # (np_,ng)
+                vals[:, gs_all == p] = np.inf
                 ai, ag = np.unravel_index(int(np.argmin(vals)), vals.shape)
                 if vals[ai, ag] < best[0]:
-                    best = (float(vals[ai, ag]), ("rel", int(Ip[ai]), int(gs[ag])))
+                    best = (float(vals[ai, ag]),
+                            ("rel", int(Ip[ai]), int(gs_all[ag])))
 
-            # 2. swap i in Ip with admitted j on another worker
-            Jo = np.nonzero((assign >= 0) & (assign != p))[0]
-            if len(Jo) > 0:
-                cj = cands[Jo]                                     # (na, W)
-                gj = assign[Jo]                                    # (na,)
-                d = cj[None, :, :] - cp[:, None, :]                # (np_,na,W)
+            # 2. swap i in Ip with admitted j on another worker (g_j == p
+            #    masked)
+            if len(Ja) > 0:
+                d = ca[None, :, :] - cp[:, None, :]                # (np_,na,W)
                 lp_new = lp[None, None, :] + d
-                lg_new = loads[gj][None, :, :] - d
-                ex = excl_two(val, idx, np.full((1, len(Jo), 1), p),
-                              gj.reshape(1, -1, 1))
+                lg_new = la[None, :, :] - d
+                ex = excl_two(val, idx, p, ga.reshape(1, -1, 1))
                 mx = np.maximum(ex, np.maximum(lp_new, lg_new))
                 vals = (G * mx - tot[None, None, :]).sum(axis=2)
+                vals[:, ga == p] = np.inf
                 ai, aj = np.unravel_index(int(np.argmin(vals)), vals.shape)
                 if vals[ai, aj] < best[0]:
                     best = (float(vals[ai, aj]),
-                            ("swap", int(Ip[ai]), int(Jo[aj])))
+                            ("swap", int(Ip[ai]), int(Ja[aj])))
 
             # 3. swap i in Ip with unadmitted j (changes the sum term)
-            Jw = np.nonzero(assign < 0)[0][:max_wait_considered]
             if len(Jw) > 0:
-                cw = cands[Jw]
                 d = cw[None, :, :] - cp[:, None, :]                # (np_,nw,W)
                 lp_new = lp[None, None, :] + d
-                ex = excl_two(val, idx, np.full((1, len(Jw), 1), p),
-                              np.full((1, len(Jw), 1), p))
+                ex = excl_two(val, idx, p, p)
                 mx = np.maximum(ex, lp_new)
                 vals = (G * mx - (tot[None, None, :] + d)).sum(axis=2)
                 ai, aj = np.unravel_index(int(np.argmin(vals)), vals.shape)

@@ -47,6 +47,9 @@ class SimConfig:
     # slot release (the paper's main interface).  "instant": requests bind
     # to a per-worker FIFO queue at arrival (Section 7.3's limitation —
     # vLLM-style engines), which strips the router of late information.
+    # "instant_ref": the original per-request Python implementation of
+    # instant mode, kept verbatim as the step-for-step regression oracle
+    # and the pre-optimization baseline for benchmarks/balancer_bench.py.
     dispatch: str = "central"
 
 
@@ -100,8 +103,17 @@ def simulate(
     slot_worker = np.repeat(np.arange(G), B)
 
     waiting: list[int] = []
-    instant = config.dispatch == "instant"
+    instant = config.dispatch in ("instant", "instant_ref")
+    instant_ref = config.dispatch == "instant_ref"
     wqueues: list[list[int]] = [[] for _ in range(G)]  # instant mode
+    # Instant-mode queue state, maintained incrementally (never recomputed
+    # by walking the queues): total queued prefill and queue length per
+    # worker.  Matches the recomputed-per-step reference exactly when
+    # prefills are float64-exact under addition (integer token counts, as
+    # every in-repo workload produces); arbitrary mixed-magnitude floats
+    # could differ from "instant_ref" by rounding in the running sum.
+    qload = np.zeros(G, dtype=np.float64)
+    qlen = np.zeros(G, dtype=np.int64)
     next_reveal = 0          # pointer into arrival-sorted requests
     completed = 0
     t_now = 0.0
@@ -140,10 +152,9 @@ def simulate(
         loads = np.bincount(slot_worker[occ], weights=slot_w[occ], minlength=G)
         counts = np.bincount(slot_worker[occ], minlength=G)
         caps = B - counts
-        if instant:
-            # route every newly arrived request immediately (no pool):
-            # the policy sees current loads + queued prefill backlog, one
-            # candidate at a time, unconstrained by free slots.
+        if instant and instant_ref:
+            # Original per-request Python implementation, kept verbatim as
+            # the regression oracle for the vectorized path below.
             qload = np.zeros(G)
             qlen = np.zeros(G, dtype=np.int64)
             for g in range(G):
@@ -166,14 +177,12 @@ def simulate(
                     rng=rng,
                 )
                 a = policy.assign(ctx)
-                g = int(a[0]) if len(a) and a[0] >= 0                     else int(np.argmin(loads + qload))
+                g = (int(a[0]) if len(a) and a[0] >= 0
+                     else int(np.argmin(loads + qload)))
                 wqueues[g].append(rid)
                 qload[g] += prefill[rid]
                 qlen[g] += 1
             waiting = []
-            # each worker pulls from its own FIFO into free slots (every
-            # step — slot releases must drain the queues even with no new
-            # arrivals)
             free_slots: list[list[int]] = [[] for _ in range(G)]
             for s_idx in np.nonzero(~occ)[0]:
                 free_slots[slot_worker[s_idx]].append(int(s_idx))
@@ -190,6 +199,78 @@ def simulate(
             occ = slot_req >= 0
             loads = np.bincount(slot_worker[occ], weights=slot_w[occ],
                                 minlength=G)
+        elif instant:
+            # Vectorized instant mode.  Route every newly arrived request
+            # immediately (no pool): the policy sees current loads + queued
+            # prefill backlog, one candidate at a time, unconstrained by
+            # free slots.  The routing loop itself is inherently sequential
+            # (each decision shifts the backlog the next one observes), but
+            # the context's active-slot arrays are batched once per step
+            # and qload/qlen are carried incrementally across steps.
+            if waiting:
+                act_idx = np.nonzero(occ)[0]
+                active_worker = slot_worker[act_idx]
+                active_w = slot_w[act_idx]
+                active_age = slot_age[act_idx]
+                active_remaining = (decode_len[slot_req[act_idx]]
+                                    - slot_age[act_idx])
+                for rid in waiting:
+                    ctx = SchedulerContext(
+                        k=k,
+                        loads=loads + qload,
+                        counts=(counts + qlen).astype(np.int64),
+                        caps=np.maximum(B - counts - qlen, 1).astype(np.int64),
+                        wait_prefill=prefill[rid:rid + 1],
+                        active_worker=active_worker,
+                        active_w=active_w,
+                        active_age=active_age,
+                        active_remaining=active_remaining,
+                        drift=drift,
+                        rng=rng,
+                    )
+                    a = policy.assign(ctx)
+                    g = (int(a[0]) if len(a) and a[0] >= 0
+                         else int(np.argmin(loads + qload)))
+                    wqueues[g].append(rid)
+                    qload[g] += prefill[rid]
+                    qlen[g] += 1
+                waiting = []
+            # Vectorized FIFO drain (every step — slot releases must drain
+            # the queues even with no new arrivals): free slot indices are
+            # ascending, hence grouped by worker; searchsorted over the
+            # cumulative free-slot runs yields each worker's slot range
+            # without materializing per-worker lists.
+            if qlen.any() and not occ.all():
+                free = np.nonzero(~occ)[0]
+                free_worker = slot_worker[free]
+                nfree = np.bincount(free_worker, minlength=G)
+                ntake = np.minimum(nfree, qlen)
+                gsel = np.nonzero(ntake > 0)[0]
+                if len(gsel) > 0:
+                    off = np.searchsorted(free_worker, np.arange(G))
+                    rid_parts = []
+                    slot_parts = []
+                    for g in gsel:
+                        g = int(g)
+                        t_ = int(ntake[g])
+                        q = wqueues[g]
+                        rid_parts.extend(q[:t_])
+                        wqueues[g] = q[t_:]
+                        slot_parts.append(free[off[g]:off[g] + t_])
+                        qlen[g] -= t_
+                    rids = np.asarray(rid_parts, dtype=np.int64)
+                    slots = np.concatenate(slot_parts)
+                    np.add.at(qload, slot_worker[slots], -prefill[rids])
+                    slot_req[slots] = rids
+                    slot_w[slots] = prefill[rids]
+                    slot_age[slots] = 0
+                    t_start[rids] = t_now
+                    for rid, s_idx in zip(rid_parts, slots):
+                        reqs[rid].assign_step = k
+                        reqs[rid].worker = int(slot_worker[s_idx])
+                    occ = slot_req >= 0
+                    loads = np.bincount(slot_worker[occ], weights=slot_w[occ],
+                                        minlength=G)
         elif waiting and caps.sum() > 0:
             act_idx = np.nonzero(occ)[0]
             ctx = SchedulerContext(
@@ -211,10 +292,10 @@ def simulate(
                 raise RuntimeError(
                     f"{policy.name}: assignment length {len(assignment)} != "
                     f"waiting {len(waiting)}")
-            # free slots per worker, in order
-            free_slots: list[list[int]] = [[] for _ in range(G)]
-            for s_idx in np.nonzero(~occ)[0]:
-                free_slots[slot_worker[s_idx]].append(int(s_idx))
+            # free slots, ascending (hence grouped by worker): worker g's
+            # u-th free slot is free[foff[g] + u]
+            free = np.nonzero(~occ)[0]
+            foff = np.searchsorted(slot_worker[free], np.arange(G))
             admitted_pos = []
             used = np.zeros(G, dtype=np.int64)
             for pos, g in enumerate(assignment):
@@ -225,7 +306,7 @@ def simulate(
                     raise RuntimeError(
                         f"{policy.name}: worker {g} over capacity at step {k}")
                 rid = waiting[pos]
-                s_idx = free_slots[g][used[g]]
+                s_idx = int(free[foff[g] + used[g]])
                 used[g] += 1
                 slot_req[s_idx] = rid
                 slot_w[s_idx] = prefill[rid]
@@ -267,8 +348,9 @@ def simulate(
                 float((lmax - loads).mean() / lmax) if lmax > 0 else 0.0)
             trace.avg_power.append(step_power / G)
             trace.n_active.append(n_act)
-            trace.n_waiting.append(len(waiting)
-                                   + sum(len(q) for q in wqueues))
+            n_queued = (sum(len(q) for q in wqueues) if instant_ref
+                        else int(qlen.sum()))
+            trace.n_waiting.append(len(waiting) + n_queued)
             if (config.record_loads_every
                     and k % config.record_loads_every == 0):
                 trace.loads.append(loads.copy())

@@ -8,7 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["decode_attention_ref", "ssm_chunk_scan_ref", "rms_norm_ref"]
+__all__ = ["decode_attention_ref", "ssm_chunk_scan_ref", "rms_norm_ref",
+           "bfio_swap_best_ref"]
 
 
 def decode_attention_ref(q, k_cache, v_cache, lengths):
@@ -54,6 +55,20 @@ def ssm_chunk_scan_ref(q, k, v, log_decay, gate):
     state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
     state, ys = jax.lax.scan(step, state0, jnp.arange(S))
     return ys.transpose(1, 0, 2, 3).astype(v.dtype), state
+
+
+def bfio_swap_best_ref(loads, cands, assign, valid):
+    """Dense oracle for the BF-IO pairwise swap search (bfio_swap.py).
+
+    Materializes the full (N, N, W) post-swap tensor and reduces it to the
+    per-row (best_val (N,), best_j (N,)) the tiled kernels produce.
+    """
+    from .bfio_swap import _pair_vals, swap_prep
+
+    lo, ga, adm, vtop, ttop = swap_prep(loads, cands, assign, valid)
+    cands = jnp.asarray(cands, jnp.float32)
+    val = _pair_vals(cands, lo, ga, adm, cands, lo, ga, adm, vtop, ttop)
+    return val.min(axis=1), val.argmin(axis=1).astype(jnp.int32)
 
 
 def rms_norm_ref(x, scale, eps: float = 1e-5):

@@ -1,0 +1,28 @@
+"""Tier-1 smoke test of the perf harness (benchmarks/check_bench.py).
+
+Runs the balancer benchmark on tiny shapes and validates the JSON schema
+and that every timing is finite — catching benchmark bit-rot in CI instead
+of at the next perf investigation.
+"""
+import json
+
+import pytest
+
+from benchmarks.check_bench import check, run_smoke
+
+
+def test_smoke_schema_and_finite_timings():
+    doc = run_smoke()
+    # the doc must round-trip through JSON (no numpy scalars etc.)
+    doc2 = json.loads(json.dumps(doc))
+    check(doc2)
+    sections = {r["section"] for r in doc2["rows"]}
+    assert sections == {"solver", "simulator", "batch"}
+
+
+def test_check_rejects_broken_docs():
+    with pytest.raises(AssertionError):
+        check({"meta": {"bench": "balancer"}, "rows": []})
+    with pytest.raises(AssertionError):
+        check({"meta": {"bench": "other"},
+               "rows": [{"section": "solver"}]})

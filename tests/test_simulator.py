@@ -101,6 +101,70 @@ class TestBasics:
         assert m.completed == 50
 
 
+class TestInstantModeRegression:
+    """The vectorized instant-mode dispatch must be step-for-step identical
+    to the original per-request implementation (kept as
+    ``dispatch="instant_ref"``): every SimMetrics accumulator — integrated
+    over all steps — must match exactly, not approximately."""
+
+    @staticmethod
+    def _instance(n=200, seed=11):
+        rng = np.random.default_rng(seed)
+        reqs = [
+            Request(rid=i, arrival_step=int(rng.integers(0, 40)),
+                    prefill=float(rng.integers(1, 80)),
+                    decode_len=int(rng.geometric(0.15)))
+            for i in range(n)
+        ]
+        return ArrivalInstance(requests=reqs)
+
+    @pytest.mark.parametrize("policy", ["jsq", "fcfs", "rr", "pod2",
+                                        "bfio_h0"])
+    def test_metrics_bit_identical_to_reference(self, policy):
+        import dataclasses
+        runs = {}
+        for mode in ["instant", "instant_ref"]:
+            m = simulate(self._instance(), make_policy(policy),
+                         SimConfig(G=8, B=4, dispatch=mode, seed=3))
+            runs[mode] = dataclasses.asdict(m)
+        assert runs["instant"] == runs["instant_ref"]
+
+    def test_traces_bit_identical_to_reference(self):
+        traces = {}
+        for mode in ["instant", "instant_ref"]:
+            tr = SimTrace()
+            simulate(self._instance(), make_policy("jsq"),
+                     SimConfig(G=8, B=4, dispatch=mode, seed=3), trace=tr)
+            traces[mode] = tr.asdict()
+        for key, ref in traces["instant_ref"].items():
+            got = traces["instant"][key]
+            assert np.array_equal(np.asarray(got), np.asarray(ref)), key
+
+    def test_time_based_arrivals_identical(self):
+        import dataclasses
+        runs = {}
+        for mode in ["instant", "instant_ref"]:
+            inst = poisson_trace(LONGBENCH_LIKE, n_requests=80, rate=300.0,
+                                 seed=5)
+            m = simulate(inst, make_policy("jsq"),
+                         SimConfig(G=4, B=6, dispatch=mode,
+                                   time_based_arrivals=True, seed=7))
+            runs[mode] = dataclasses.asdict(m)
+        assert runs["instant"] == runs["instant_ref"]
+
+    def test_golden_metrics_fixed_seed(self):
+        """Pins BOTH instant implementations to the seed repo's numbers, so
+        a semantics change in either path (not just a divergence between
+        them) fails loudly."""
+        gold = {"steps": 62, "total_imbalance": 29202.0, "completed": 200,
+                "avg_imbalance": 471.0}
+        for mode in ["instant", "instant_ref"]:
+            m = simulate(self._instance(), make_policy("jsq"),
+                         SimConfig(G=8, B=4, dispatch=mode, seed=3))
+            for key, want in gold.items():
+                assert getattr(m, key) == want, (mode, key)
+
+
 class TestPolicyOrdering:
     """On an overloaded heterogeneous instance, BF-IO must beat the
     size-agnostic baselines on imbalance (the paper's core claim)."""
