@@ -19,6 +19,9 @@ SIM_KEYS = {"G", "B", "policy", "pre_steps_per_s", "post_steps_per_s",
             "pre_wall_s", "post_wall_s", "steps", "speedup", "metrics_equal"}
 BATCH_KEYS = {"C", "G", "N", "W", "prune_k", "batch_us", "sequential_us",
               "speedup"}
+ENGINE_KEYS = {"G", "B", "policy", "n_requests", "pre_steps_per_s",
+               "post_steps_per_s", "pre_wall_s", "post_wall_s", "steps",
+               "speedup", "metrics_equal"}
 
 
 def _finite_pos(x) -> bool:
@@ -33,7 +36,7 @@ def check(doc: dict) -> None:
     rows = doc["rows"]
     assert rows, "no benchmark rows"
     sections = {r.get("section") for r in rows}
-    assert sections >= {"solver", "simulator", "batch"}, sections
+    assert sections >= {"solver", "simulator", "batch", "engine"}, sections
     for r in rows:
         sec = r["section"]
         if sec == "solver":
@@ -54,6 +57,13 @@ def check(doc: dict) -> None:
             assert BATCH_KEYS <= set(r), BATCH_KEYS - set(r)
             assert _finite_pos(r["batch_us"])
             assert _finite_pos(r["sequential_us"])
+        elif sec == "engine":
+            assert ENGINE_KEYS <= set(r), ENGINE_KEYS - set(r)
+            assert _finite_pos(r["pre_steps_per_s"])
+            assert _finite_pos(r["post_steps_per_s"])
+            assert _finite_pos(r["steps"])
+            assert r["metrics_equal"] is True, \
+                "vectorized engine stats diverged from the ref engine"
 
 
 def run_smoke() -> dict:

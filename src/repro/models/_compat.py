@@ -1,0 +1,37 @@
+"""JAX version compatibility shims for the model stack.
+
+``shard_map`` moved twice across the JAX versions this repo targets:
+
+* jax >= 0.5: ``jax.shard_map`` with the replication check spelled
+  ``check_vma``;
+* jax 0.4.x: ``jax.experimental.shard_map.shard_map`` with the same
+  check spelled ``check_rep``.
+
+Call sites use :func:`shard_map` below with the *new* keyword
+(``check_vma``); the shim maps it onto whatever the installed JAX
+provides, so the same model code runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable ``shard_map``.
+
+    ``check_vma=None`` leaves the backend default; a bool is forwarded as
+    ``check_vma`` (new JAX) or ``check_rep`` (0.4.x).
+    """
+    kw = {}
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

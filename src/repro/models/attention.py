@@ -17,6 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ._compat import shard_map
+
 __all__ = ["causal_attention", "cross_attention", "decode_attention"]
 
 _NEG = -1e30
@@ -328,7 +330,7 @@ def decode_attention_lsharded(q, k_cache, v_cache, lengths, *, mesh,
         out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
         return out.reshape(b, hq, hd).astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(b_spec, None, None),
                   P(b_spec, model_axis, None, None),

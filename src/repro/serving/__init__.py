@@ -4,3 +4,4 @@ management, and the device-side routed serving loop."""
 from .engine import EngineConfig, ServeRequest, ServingEngine  # noqa: F401
 from .device_loop import init_loop_state, make_device_serving_loop  # noqa: F401
 from .paged_cache import BlockAllocator, PagedKVCache  # noqa: F401
+from .slot_table import SlotTable, cap_assignment, slot_worker_map  # noqa: F401

@@ -8,10 +8,12 @@ admit→decode→complete loop under one ``jax.lax`` program, so a TPU can run
 many serving steps without host round-trips (useful for simulation at
 device speed and for offline batch inference).
 
-State is fixed-shape: a slot table (G*B slots), a bounded waiting buffer,
-and the BF-IO assignment runs as traced code each step.  Workload dynamics
-follow the paper's model (unit KV drift, known-at-admission prefill sizes,
-completion at a fixed per-request decode length).
+State is fixed-shape: a slot table (G*B slots, the same flat layout as
+:mod:`repro.serving.slot_table` — slot s belongs to worker s // B), a
+bounded waiting buffer, and the BF-IO assignment runs as traced code each
+step.  Workload dynamics follow the paper's model (unit KV drift,
+known-at-admission prefill sizes, completion at a fixed per-request decode
+length).
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.balancer_jax import bfio_assign
+from .slot_table import slot_worker_map
 
 __all__ = ["LoopState", "make_device_serving_loop"]
 
@@ -41,7 +44,7 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
     """Returns jitted ``run(state, n_steps) -> state`` executing the
     admit/decode/complete loop fully on device."""
     S = G * B
-    slot_worker = jnp.repeat(jnp.arange(G), B)
+    slot_worker = jnp.asarray(slot_worker_map(G, B))
 
     def step(state: LoopState, _):
         # --- current loads ------------------------------------------------

@@ -15,10 +15,23 @@ the per-worker batches are stacked; on a production mesh the worker axis
 is the "data" mesh axis (each DP shard holds its own slots) and the same
 engine code drives the device-sharded batch.  The router's decision
 problem is *identical* in both cases — that is the point of the paper.
+
+Two hot-path implementations are kept in-tree (``EngineConfig.engine_mode``):
+
+* ``"vec"`` (default) — numpy array state over the shared
+  :class:`~repro.serving.slot_table.SlotTable`, one batched gather/scatter
+  per cache leaf per admitted batch, and bucketed *compact decode*: only
+  the active slots (rounded up to a small set of batch buckets, so jit
+  recompiles stay bounded) are decoded instead of all G*B rows.
+* ``"ref"`` — the original per-slot Python loops and per-request cache
+  writes, kept as a live-measured regression oracle
+  (``benchmarks/balancer_bench.py`` section ``engine`` times both and
+  asserts stats parity).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -31,6 +44,7 @@ from ..core.metrics import step_imbalance
 from ..core.policies import Policy, SchedulerContext
 from ..core.workload import DriftModel, drift_for_family
 from ..models import decode_fn, init_cache, prefill_fn
+from .slot_table import SlotTable, cap_assignment
 
 __all__ = ["ServeRequest", "EngineConfig", "ServingEngine"]
 
@@ -64,6 +78,80 @@ class EngineConfig:
     t_token: float = 1.005e-7
     power: PowerModel = A100_POWER
     greedy: bool = True             # greedy sampling
+    engine_mode: str = "vec"        # "vec" (array hot path) | "ref" (seed)
+
+
+# ----------------------------------------------------------------------
+# Jitted decode variants, cached at module level so engines over the same
+# (cfg, mesh) share compilations (the benchmark builds many engines).
+# ----------------------------------------------------------------------
+
+def _gather_rows(cache, idx):
+    """Gather cache rows ``idx``: batch is dim 0 for 1-d leaves (lengths),
+    dim 1 for stacked (layers, batch, ...) leaves."""
+    return jax.tree.map(
+        lambda a: a[idx] if a.ndim == 1 else a[:, idx], cache)
+
+
+def _scatter_rows(cache, sub, dst):
+    """Write sub-batch rows back at ``dst`` (out-of-bounds entries of
+    ``dst`` are dropped by JAX scatter semantics — used for padding)."""
+    def put(full, part):
+        if full.ndim == 1:
+            return full.at[dst].set(part.astype(full.dtype))
+        return full.at[:, dst].set(part.astype(full.dtype))
+    return jax.tree.map(put, cache, sub)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode(cfg: ModelConfig, mesh):
+    """Seed-path decode: full G*B batch, returns (logits, cache)."""
+    return jax.jit(lambda p, c, t: decode_fn(cfg, p, c, t, mesh=mesh))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode_full(cfg: ModelConfig, mesh):
+    """Full-batch decode with fused greedy sampling: (tokens, cache).
+
+    The cache argument is donated: the caller always replaces its cache
+    with the returned one, so the old buffers can be reused in place."""
+    def f(p, c, t):
+        logits, c2 = decode_fn(cfg, p, c, t, mesh=mesh)
+        return jnp.argmax(logits, -1).astype(jnp.int32), c2
+    return jax.jit(f, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_prefill(cfg: ModelConfig, mesh, max_len: int):
+    """Jitted prefill (vec path; the ref path keeps the seed's eager
+    prefill).  Callers bucket the batch-size dim to bound recompiles."""
+    return jax.jit(functools.partial(prefill_fn, cfg, max_len=max_len,
+                                     mesh=mesh))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode_compact(cfg: ModelConfig, mesh):
+    """Compact decode: gather rows ``idx`` out of the flat cache, decode
+    only those, scatter the updated rows back at ``dst``.  Padding rows
+    carry ``dst == N`` so their writes are dropped."""
+    def f(p, cache, toks, idx, dst):
+        sub = _gather_rows(cache, idx)
+        logits, new_sub = decode_fn(cfg, p, sub, toks, mesh=mesh)
+        return (jnp.argmax(logits, -1).astype(jnp.int32),
+                _scatter_rows(cache, new_sub, dst))
+    return jax.jit(f, donate_argnums=(1,))
+
+
+def _decode_buckets(N: int) -> list[int]:
+    """Sub-batch sizes the compact decode path may run at.  A small
+    geometric ladder bounds jit recompiles while keeping the drain-phase
+    decode cost proportional to the active count."""
+    buckets = {N}
+    b = N
+    while b > 4:
+        b = max(4, (b + 3) // 4)
+        buckets.add(b)
+    return sorted(buckets)
 
 
 class ServingEngine:
@@ -71,6 +159,10 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  policy: Policy, *, mesh=None, drift: DriftModel = None):
+        if engine_cfg.engine_mode not in ("vec", "ref"):
+            raise ValueError(
+                f"engine_mode must be 'vec' or 'ref', got "
+                f"{engine_cfg.engine_mode!r}")
         self.cfg = cfg
         self.params = params
         self.ec = engine_cfg
@@ -80,11 +172,18 @@ class ServingEngine:
         G, B = engine_cfg.n_workers, engine_cfg.slots_per_worker
         self.G, self.B = G, B
         N = G * B
+        self.N = N
         # one flat cache over all slots; slot s belongs to worker s // B
         self.cache = init_cache(cfg, N, engine_cfg.max_seq_len)
+        self.table = SlotTable(G, B)
         self.slot_req: list[Optional[ServeRequest]] = [None] * N
         self.slot_tokens = np.zeros(N, dtype=np.int32)   # next input token
-        self.slot_load = np.zeros(N, dtype=np.float64)   # workload proxy
+        self.slot_load = self.table.load                 # workload proxy
+        # vec-mode per-slot request scalars (mirrors of the ServeRequest
+        # fields the scheduler context needs, so ctx build is one gather)
+        self.slot_age = np.zeros(N, dtype=np.int64)      # len(generated)
+        self.slot_max_new = np.zeros(N, dtype=np.int64)
+        self.slot_eos = np.full(N, -1, dtype=np.int64)
         self.wait: list[ServeRequest] = []
         self.t_now = 0.0
         self.steps = 0
@@ -93,8 +192,11 @@ class ServingEngine:
         self.tokens_out = 0
         self.rng = np.random.default_rng(0)
 
-        self._decode = jax.jit(
-            lambda p, c, t: decode_fn(cfg, p, c, t, mesh=mesh))
+        self._decode = _jitted_decode(cfg, mesh)
+        self._decode_full = _jitted_decode_full(cfg, mesh)
+        self._decode_compact = _jitted_decode_compact(cfg, mesh)
+        self._prefill = _jitted_prefill(cfg, mesh, engine_cfg.max_seq_len)
+        self._buckets = _decode_buckets(N)
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -105,6 +207,8 @@ class ServingEngine:
         return slot // self.B
 
     def _loads(self) -> np.ndarray:
+        if self.ec.engine_mode == "vec":
+            return self.table.loads()
         loads = np.zeros(self.G)
         for s, r in enumerate(self.slot_req):
             if r is not None:
@@ -112,6 +216,8 @@ class ServingEngine:
         return loads
 
     def _counts(self) -> np.ndarray:
+        if self.ec.engine_mode == "vec":
+            return self.table.counts()
         counts = np.zeros(self.G, dtype=np.int64)
         for s, r in enumerate(self.slot_req):
             if r is not None:
@@ -128,7 +234,24 @@ class ServingEngine:
         if caps.sum() <= 0:
             return
         loads = self._loads()
-        act = [(s, r) for s, r in enumerate(self.slot_req) if r is not None]
+        if self.ec.engine_mode == "vec":
+            act_idx = self.table.active_indices()
+            active_worker = self.table.worker[act_idx]
+            active_w = self.table.load[act_idx]
+            active_age = self.slot_age[act_idx]
+            active_remaining = np.maximum(
+                self.slot_max_new[act_idx] - active_age, 1)
+        else:
+            act = [(s, r) for s, r in enumerate(self.slot_req)
+                   if r is not None]
+            active_worker = np.array([self._worker_of(s) for s, _ in act],
+                                     dtype=np.int64)
+            active_w = np.array([self.slot_load[s] for s, _ in act])
+            active_age = np.array([len(r.generated) for _, r in act],
+                                  dtype=np.int64)
+            active_remaining = np.array(
+                [max(r.max_new_tokens - len(r.generated), 1)
+                 for _, r in act], dtype=np.int64)
         ctx = SchedulerContext(
             k=self.steps,
             loads=loads,
@@ -136,18 +259,17 @@ class ServingEngine:
             caps=caps.astype(np.int64),
             wait_prefill=np.array([len(r.tokens) for r in self.wait],
                                   dtype=np.float64),
-            active_worker=np.array([self._worker_of(s) for s, _ in act],
-                                   dtype=np.int64),
-            active_w=np.array([self.slot_load[s] for s, _ in act]),
-            active_age=np.array([len(r.generated) for _, r in act],
-                                dtype=np.int64),
-            active_remaining=np.array(
-                [max(r.max_new_tokens - len(r.generated), 1)
-                 for _, r in act], dtype=np.int64),
+            active_worker=active_worker,
+            active_w=active_w,
+            active_age=active_age,
+            active_remaining=active_remaining,
             drift=self.drift,
             rng=self.rng,
         )
-        assignment = self.policy.assign(ctx)
+        # a policy may over-subscribe a worker beyond its free slots; the
+        # excess requests simply keep waiting instead of crashing placement
+        assignment = cap_assignment(
+            np.asarray(self.policy.assign(ctx)), caps)
         to_admit: list[tuple[ServeRequest, int]] = []
         for pos, g in enumerate(assignment):
             if g >= 0:
@@ -159,13 +281,26 @@ class ServingEngine:
         self._prefill_batch(to_admit)
 
     def _prefill_batch(self, items: list[tuple["ServeRequest", int]]) -> None:
-        """Run prefill for admitted requests and write their cache slots."""
+        """Run prefill for admitted requests and write their cache slots.
+
+        Prompts longer than ``max_seq_len`` are truncated to it (the cache
+        cannot hold more); the prefill pad never exceeds ``max_seq_len``.
+        """
         ec = self.ec
-        pad = max(ec.prefill_pad,
-                  max(len(r.tokens) for r, _ in items))
+        vec = ec.engine_mode == "vec"
+        pad = min(max(ec.prefill_pad,
+                      max(len(r.tokens) for r, _ in items)),
+                  ec.max_seq_len)
+        if vec:
+            # round the pad up to a multiple of prefill_pad so the jitted
+            # prefill sees few distinct sequence lengths
+            pad = min(-(-pad // ec.prefill_pad) * ec.prefill_pad,
+                      ec.max_seq_len)
         nb = len(items)
-        toks = np.zeros((nb, pad), dtype=np.int32)
-        lens = np.zeros(nb, dtype=np.int32)
+        # vec: bucket the batch dim too (same ladder as compact decode)
+        nbp = next(b for b in self._buckets if b >= nb) if vec else nb
+        toks = np.zeros((nbp, pad), dtype=np.int32)
+        lens = np.zeros(nbp, dtype=np.int32)
         for i, (r, _) in enumerate(items):
             L = min(len(r.tokens), pad)
             toks[i, :L] = r.tokens[:L]
@@ -173,38 +308,86 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
         if self.cfg.family == "vlm":
             batch["patches"] = jnp.zeros(
-                (nb, self.cfg.patch_tokens, self.cfg.d_model),
+                (nbp, self.cfg.patch_tokens, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
         if self.cfg.family == "audio":
             batch["frames"] = jnp.zeros(
-                (nb, self.cfg.encoder_seq, self.cfg.d_model),
+                (nbp, self.cfg.encoder_seq, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
-        logits, mini_cache = prefill_fn(self.cfg, self.params, batch,
-                                        max_len=ec.max_seq_len,
-                                        mesh=self.mesh)
+        if vec:
+            logits, mini_cache = self._prefill(self.params, batch)
+        else:
+            logits, mini_cache = prefill_fn(self.cfg, self.params, batch,
+                                            max_len=ec.max_seq_len,
+                                            mesh=self.mesh)
         first = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)
 
         # place each request into a free slot of its assigned worker
+        workers = np.array([g for _, g in items], dtype=np.int64)
+        if ec.engine_mode == "vec":
+            slots = self.table.allocate(workers)
+        else:
+            slots = np.empty(nb, dtype=np.int64)
+            for i, (r, g) in enumerate(items):
+                free = [s for s in range(g * self.B, (g + 1) * self.B)
+                        if self.slot_req[s] is None]
+                if not free:
+                    raise RuntimeError(
+                        f"worker {g} has no free slot for request {r.rid} "
+                        f"(policy assignment not capped?)")
+                slots[i] = free[0]
+                self.slot_req[free[0]] = r
+            self.table.active[slots] = True
         for i, (r, g) in enumerate(items):
-            slot = next(s for s in range(g * self.B, (g + 1) * self.B)
-                        if self.slot_req[s] is None)
+            slot = int(slots[i])
             r.worker, r.slot = g, slot
-            self.slot_req[slot] = r
+            if vec:
+                self.slot_req[slot] = r  # ref set it during the free scan
             self.slot_tokens[slot] = first[i]
             self.slot_load[slot] = float(lens[i])
+            self.slot_age[slot] = 1
+            self.slot_max_new[slot] = r.max_new_tokens
+            self.slot_eos[slot] = r.eos_id
             r.generated.append(int(first[i]))
             if np.isnan(r.t_first_token):
                 r.t_first_token = self.t_now
-            self._copy_cache_slot(mini_cache, i, slot)
+        if ec.engine_mode == "vec":
+            self._copy_cache_batch(mini_cache, np.arange(nb), slots)
+        else:
+            for i in range(nb):
+                self._copy_cache_slot(mini_cache, i, int(slots[i]))
 
-    def _copy_cache_slot(self, mini_cache, src: int, dst: int) -> None:
-        """Copy one request's cache entry into the engine's flat cache.
+    def _copy_cache_batch(self, mini_cache, src: np.ndarray,
+                          dst: np.ndarray) -> None:
+        """Copy admitted requests' cache entries into the flat cache:
+        ONE gather + scatter per cache leaf for the whole batch.
 
         Cache leaves are stacked (layers, batch, ...): batch is dim 1,
         except 'lengths' (batch is dim 0)."""
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+
         def copy(dst_leaf, src_leaf):
-            if dst_leaf.ndim >= 2 and src_leaf.shape[0] != dst_leaf.shape[0]:
-                pass
+            if dst_leaf.ndim == 1:       # lengths
+                return dst_leaf.at[dst].set(
+                    src_leaf[src].astype(dst_leaf.dtype))
+            s = src_leaf[:, src]
+            if s.shape[0] != dst_leaf.shape[0]:
+                raise ValueError("layer-count mismatch")
+            tail = dst_leaf.shape[2:]
+            if s.shape[2:] != tail:
+                # mini cache may carry a shorter kv-length dim (prefill pad)
+                pads = [(0, 0), (0, 0)] + [
+                    (0, tail[i] - s.shape[2 + i]) for i in range(len(tail))]
+                s = jnp.pad(s, pads)
+            return dst_leaf.at[:, dst].set(s.astype(dst_leaf.dtype))
+
+        self.cache = jax.tree.map(copy, self.cache, mini_cache)
+
+    def _copy_cache_slot(self, mini_cache, src: int, dst: int) -> None:
+        """Seed path: copy one request's cache entry (one dispatch per
+        leaf per request — the vec path batches this)."""
+        def copy(dst_leaf, src_leaf):
             if dst_leaf.ndim == 1:       # lengths
                 return dst_leaf.at[dst].set(src_leaf[src])
             # (layers, batch, ...): maybe shorter kv length in mini cache
@@ -225,40 +408,91 @@ class ServingEngine:
     def step(self) -> dict:
         """One barrier-synchronized decode step for all active requests."""
         self._admit()
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        vec = self.ec.engine_mode == "vec"
+        if vec:
+            active_idx = self.table.active_indices()
+            n_active = active_idx.size
+        else:
+            active = [s for s, r in enumerate(self.slot_req)
+                      if r is not None]
+            n_active = len(active)
         loads = self._loads()
-        lmax = float(loads.max()) if len(active) else 0.0
+        lmax = float(loads.max()) if n_active else 0.0
         dt = self.ec.step_overhead + self.ec.t_token * lmax
         u = loads / lmax if lmax > 0 else np.zeros(self.G)
         self.energy_j += dt * float(self.ec.power.power(u).sum())
-        self.imbalance_sum += step_imbalance(loads) if len(active) else 0.0
+        imb = step_imbalance(loads) if n_active else 0.0
+        self.imbalance_sum += imb
         self.t_now += dt
         self.steps += 1
 
-        if active:
-            tokens = jnp.asarray(self.slot_tokens)
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              tokens)
-            nxt = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)
-            for s in active:
-                r = self.slot_req[s]
-                tok = int(nxt[s])
-                r.generated.append(tok)
-                self.slot_tokens[s] = tok
-                self.tokens_out += 1
-                self.slot_load[s] += self.drift.increment(self.steps)
-                if (len(r.generated) >= r.max_new_tokens
-                        or tok == r.eos_id):
-                    r.t_finish = self.t_now
-                    self.slot_req[s] = None
-                    self.slot_load[s] = 0.0
-        return {"t": self.t_now, "active": len(active),
+        if n_active:
+            if vec:
+                self._decode_step_vec(active_idx)
+            else:
+                self._decode_step_ref(active)
+        return {"t": self.t_now, "active": n_active,
                 "waiting": len(self.wait), "max_load": lmax,
-                "imbalance": step_imbalance(loads) if active else 0.0}
+                "imbalance": imb}
+
+    def _decode_step_ref(self, active: list[int]) -> None:
+        """Seed decode path: always decode all G*B slots, per-slot loop."""
+        tokens = jnp.asarray(self.slot_tokens)
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        nxt = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)
+        for s in active:
+            r = self.slot_req[s]
+            tok = int(nxt[s])
+            r.generated.append(tok)
+            self.slot_tokens[s] = tok
+            self.tokens_out += 1
+            self.slot_load[s] += self.drift.increment(self.steps)
+            if (len(r.generated) >= r.max_new_tokens
+                    or tok == r.eos_id):
+                r.t_finish = self.t_now
+                self.slot_req[s] = None
+                self.slot_load[s] = 0.0
+                self.table.active[s] = False
+
+    def _decode_step_vec(self, active_idx: np.ndarray) -> None:
+        """Vectorized decode path: compact the active slots into the
+        smallest decode bucket and run the model only on those rows."""
+        n = active_idx.size
+        nb = next(b for b in self._buckets if b >= n)
+        if nb >= self.N:
+            nxt_all, self.cache = self._decode_full(
+                self.params, self.cache, jnp.asarray(self.slot_tokens))
+            nxt = np.asarray(nxt_all)[active_idx]
+        else:
+            idx = np.zeros(nb, dtype=np.int32)
+            idx[:n] = active_idx
+            dst = np.full(nb, self.N, dtype=np.int32)  # pads: dropped writes
+            dst[:n] = active_idx
+            nxt_sub, self.cache = self._decode_compact(
+                self.params, self.cache,
+                jnp.asarray(self.slot_tokens[idx]),
+                jnp.asarray(idx), jnp.asarray(dst))
+            nxt = np.asarray(nxt_sub)[:n]
+
+        self.slot_tokens[active_idx] = nxt
+        self.slot_load[active_idx] += self.drift.increment(self.steps)
+        self.slot_age[active_idx] += 1
+        self.tokens_out += n
+        for pos, s in enumerate(active_idx):
+            self.slot_req[s].generated.append(int(nxt[pos]))
+        done = ((self.slot_age[active_idx] >= self.slot_max_new[active_idx])
+                | (nxt.astype(np.int64) == self.slot_eos[active_idx]))
+        if done.any():
+            done_idx = active_idx[done]
+            for s in done_idx:
+                r = self.slot_req[s]
+                r.t_finish = self.t_now
+                self.slot_req[s] = None
+            self.table.release(done_idx)
 
     def run(self, max_steps: int = 10_000) -> dict:
         """Step until all submitted requests finish."""
-        while (self.wait or any(r is not None for r in self.slot_req)):
+        while self.wait or self.table.active.any():
             if self.steps >= max_steps:
                 raise RuntimeError("engine exceeded max_steps")
             self.step()

@@ -17,7 +17,7 @@ def test_smoke_schema_and_finite_timings():
     doc2 = json.loads(json.dumps(doc))
     check(doc2)
     sections = {r["section"] for r in doc2["rows"]}
-    assert sections == {"solver", "simulator", "batch"}
+    assert sections == {"solver", "simulator", "batch", "engine"}
 
 
 def test_check_rejects_broken_docs():
