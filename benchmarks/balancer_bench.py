@@ -20,6 +20,14 @@ precisely for this):
   ``engine_mode="vec"`` (slot-table arrays, batched cache scatter,
   bucketed compact decode), with a stats-equality check (steps, tokens,
   energy_j, avg_imbalance bit-identical).
+* **engine_paged** — the pluggable serving seams.  ``kind="grid"`` rows:
+  ``cache_backend="slot"`` vs ``"paged"`` steps/sec with a stats-equality
+  check, plus resident-KV bytes (paged peak resident vs the dense
+  G*B*max_seq_len the slot layout pins — the ratio is the paging win).
+  The ``kind="stall"`` row: max step wall-time while an admission wave of
+  long prompts lands, synchronous prefill vs chunked
+  (``prefill_chunk``) — chunking bounds the per-step prompt work so
+  decode is never stalled behind a wave.
 
 Run:  PYTHONPATH=src python -m benchmarks.balancer_bench [--full] [--smoke]
 Writes BENCH_balancer.json at the repo root (and benchmarks/results/).
@@ -235,6 +243,158 @@ def _engine_case(G: int, B: int, *, n_rounds: float = 1.5,
     return out
 
 
+def _engine_paged_case(G: int, B: int, *, n_rounds: float = 1.0,
+                       policy: str = "jsq", seed: int = 7) -> dict:
+    """slot-vs-paged cache backend on the vec engine: steps/s, stats
+    parity, and resident-KV bytes (the paging win: peak resident KV
+    tracks actual tokens, the slot layout pins G*B*max_seq_len)."""
+    from repro.core import make_policy
+    from repro.serving import EngineConfig, ServingEngine
+
+    st = _engine_setup()
+    out = {"section": "engine_paged", "kind": "grid", "G": G, "B": B,
+           "policy": policy, "n_requests": int(G * B * n_rounds)}
+    stats = {}
+    for backend in ("slot", "paged"):
+        ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                          cache_backend=backend, paged_block_size=16)
+
+        def one_run(rounds):
+            eng = ServingEngine(st["cfg"], st["params"], ec,
+                                make_policy(policy), mesh=st["mesh"])
+            for r in _engine_requests(G, B, n_rounds=rounds, seed=seed):
+                eng.submit(r)
+            s = eng.run(max_steps=100_000)
+            return eng, s
+
+        one_run(n_rounds)  # warmup: compile every bucket this run hits
+        t0 = time.time()
+        eng, s = one_run(n_rounds)
+        wall = time.time() - t0
+        stats[backend] = s
+        out[f"{backend}_steps_per_s"] = s["steps"] / max(wall, 1e-9)
+        out[f"{backend}_wall_s"] = wall
+        out["steps"] = s["steps"]
+        if backend == "paged":
+            out["paged_kv_peak_bytes"] = int(eng.kv_peak_bytes)
+            out["paged_pool_bytes"] = int(eng.backend.pool_bytes())
+        else:
+            out["slot_kv_bytes"] = int(eng.backend.resident_kv_bytes())
+    out["speedup"] = out["paged_steps_per_s"] / out["slot_steps_per_s"]
+    out["kv_bytes_ratio"] = (out["paged_kv_peak_bytes"]
+                             / max(out["slot_kv_bytes"], 1))
+    out["metrics_equal"] = stats["slot"] == stats["paged"]
+    return out
+
+
+_STALL_STATE: dict = {}
+
+
+def _stall_setup():
+    """A deeper model for the stall measurement: with the bench-tiny
+    model a decode step is ~2 ms, the same order as CPU dispatch jitter,
+    so max-vs-median ratios measure the host, not the engine."""
+    if _STALL_STATE:
+        return _STALL_STATE
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.models import init_params, split_params
+
+    cfg = ModelConfig(name="bench-stall", family="dense", n_layers=4,
+                      d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                      vocab_size=128, dtype="float32")
+    params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
+    _STALL_STATE.update(cfg=cfg, params=params, mesh=make_cpu_mesh())
+    return _STALL_STATE
+
+
+def _engine_stall_case(G: int, B: int, *, chunk: int = 8,
+                       prompt_len: int = 192, warm_n: int = 16,
+                       repeats: int = 3, tiny_model: bool = False,
+                       seed: int = 9) -> dict:
+    """Admission-wave decode stall: a burst of long prompts lands while
+    ``warm_n`` requests are decoding.  The synchronous path prefills the
+    whole wave inside one barrier step (max step wall >> steady decode
+    step); chunked prefill bounds per-step prompt work at the budget, so
+    the max step stays within a small factor of steady state.
+
+    The scenario is deterministic, so each timed step takes the min over
+    ``repeats`` identical runs (with the GC parked) — the standard way
+    to strip scheduler/GC spikes from per-step wall times on CPU.
+    """
+    import gc
+
+    from repro.core import make_policy
+    from repro.serving import EngineConfig, ServeRequest, ServingEngine
+
+    st = _engine_setup() if tiny_model else _stall_setup()
+    N = G * B
+    warm_n = max(2, min(warm_n, N - 2))
+    burst_n = N - warm_n
+
+    def scenario(chunked: bool):
+        ec = EngineConfig(n_workers=G, slots_per_worker=B,
+                          max_seq_len=256,
+                          prefill_chunk=chunk if chunked else 0)
+        eng = ServingEngine(st["cfg"], st["params"], ec,
+                            make_policy("jsq"), mesh=st["mesh"])
+        rng = np.random.default_rng(seed)
+        for i in range(warm_n):
+            eng.submit(ServeRequest(
+                rid=i, tokens=rng.integers(1, 128, size=8),
+                max_new_tokens=100_000))  # decode throughout the scenario
+        for _ in range(3):
+            eng.step()
+        gc.collect()
+        gc.disable()
+        try:
+            steady = []
+            for _ in range(20):
+                t0 = time.perf_counter()
+                eng.step()
+                steady.append(time.perf_counter() - t0)
+            burst = [ServeRequest(
+                rid=100 + i, tokens=rng.integers(1, 128, size=prompt_len),
+                max_new_tokens=2) for i in range(burst_n)]
+            for r in burst:
+                eng.submit(r)
+            walls = []
+            while not all(r.done for r in burst):
+                t0 = time.perf_counter()
+                eng.step()
+                walls.append(time.perf_counter() - t0)
+                if len(walls) > 20_000:
+                    raise RuntimeError("admission burst never drained")
+        finally:
+            gc.enable()
+        return np.asarray(steady), np.asarray(walls)
+
+    def measure(chunked: bool):
+        scenario(chunked)       # warmup: compile every shape it hits
+        runs = [scenario(chunked) for _ in range(repeats)]
+        n = min(len(w) for _, w in runs)
+        walls = np.min([w[:n] for _, w in runs], axis=0)
+        steady = float(np.median(np.min([s for s, _ in runs], axis=0)))
+        return steady, float(walls.max()), n
+
+    s_med, s_max, s_steps = measure(False)
+    c_med, c_max, c_steps = measure(True)
+    return {"section": "engine_paged", "kind": "stall", "G": G, "B": B,
+            "prefill_chunk": chunk, "burst_prompts": burst_n,
+            "prompt_len": prompt_len, "warm_decoders": warm_n,
+            "repeats": repeats,
+            "steady_step_ms_sync": s_med * 1e3,
+            "burst_max_step_ms_sync": s_max * 1e3,
+            "stall_x_sync": s_max / max(s_med, 1e-9),
+            "burst_steps_sync": s_steps,
+            "steady_step_ms_chunked": c_med * 1e3,
+            "burst_max_step_ms_chunked": c_max * 1e3,
+            "stall_x_chunked": c_max / max(c_med, 1e-9),
+            "burst_steps_chunked": c_steps}
+
+
 def run(full: bool = False, smoke: bool = False,
         out_path: str | None = None) -> dict:
     if smoke:
@@ -242,6 +402,10 @@ def run(full: bool = False, smoke: bool = False,
         sim_grid = [(8, 4)]
         batch_grid = [(2, 4, 8)]
         engine_grid = [(2, 2)]
+        paged_grid = [(2, 2)]
+        stall_shape = (2, 2)
+        stall_kw = dict(chunk=16, prompt_len=64, warm_n=2, repeats=1,
+                        tiny_model=True)
         n_rounds, iters = 2.0, 2
     else:
         solver_grid = [(G, N) for G in (64, 256, 1024)
@@ -249,6 +413,9 @@ def run(full: bool = False, smoke: bool = False,
         sim_grid = [(64, 72), (256, 72), (1024, 72)]
         batch_grid = [(8, 64, 256)]
         engine_grid = [(G, B) for G in (4, 16, 64) for B in (8, 32)]
+        paged_grid = [(G, B) for G in (4, 16, 64) for B in (8, 32)]
+        stall_shape = (4, 8)
+        stall_kw = dict(chunk=8, prompt_len=192, warm_n=16, repeats=7)
         n_rounds, iters = 4.0, 10
 
     rows = []
@@ -286,6 +453,21 @@ def run(full: bool = False, smoke: bool = False,
               f"post={r['post_steps_per_s']:7.1f} steps/s "
               f"speedup={r['speedup']:5.1f}x equal={r['metrics_equal']}",
               flush=True)
+    for G, B in paged_grid:
+        r = _engine_paged_case(G, B)
+        rows.append(r)
+        print(f"  paged  G={G:<3d} B={B:<3d} "
+              f"slot={r['slot_steps_per_s']:7.1f} "
+              f"paged={r['paged_steps_per_s']:7.1f} steps/s "
+              f"kv={r['kv_bytes_ratio']:.2f}x of dense "
+              f"equal={r['metrics_equal']}", flush=True)
+    r = _engine_stall_case(*stall_shape, **stall_kw)
+    rows.append(r)
+    print(f"  stall  G={r['G']} B={r['B']} "
+          f"sync={r['stall_x_sync']:.1f}x "
+          f"chunked={r['stall_x_chunked']:.1f}x of steady step "
+          f"(burst of {r['burst_prompts']}x{r['prompt_len']}-token "
+          f"prompts)", flush=True)
 
     doc = {
         "meta": {
@@ -299,7 +481,8 @@ def run(full: bool = False, smoke: bool = False,
                    "(the pre-optimization implementations, kept in-tree)",
             "post": "tiled swap kernel with top-K pruning / vectorized "
                     "instant dispatch / slot-table engine with bucketed "
-                    "compact decode",
+                    "compact decode / paged KV backend + chunked prefill "
+                    "(engine_paged section)",
         },
         "rows": rows,
     }

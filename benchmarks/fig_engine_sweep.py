@@ -1,0 +1,154 @@
+"""Policy sweep on the REAL serving engine (not the simulator).
+
+The simulator sweeps (fig_scaling etc.) show BF-IO's imbalance/energy win
+under the paper's abstract workload model; this figure re-runs the same
+fcfs/jsq/pod/bfio comparison through the actual ``ServingEngine`` — real
+prefill, real KV cache, real barrier-stepped decode on a tiny dense model
+— over G ∈ {4, 16, 64} workers.  CI-feasible since the vectorized engine
+hot path (ROADMAP Performance, ``engine`` bench section).
+
+Writes ``benchmarks/results/fig_engine_sweep.json`` (the table view) and,
+when matplotlib is importable, ``fig_engine_sweep.png`` next to it.
+
+    PYTHONPATH=src python -m benchmarks.fig_engine_sweep [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from .common import RESULTS_DIR, print_csv, save_rows
+
+POLICIES = ["fcfs", "jsq", "pod2", "bfio_h0"]
+# categorical slots 1-4 of the validated reference palette (light mode,
+# adjacent-pair CVD dE 9.1 / normal-vision 19.6 — see the dataviz palette
+# doc); color follows the policy, never its rank, and marker shape is the
+# secondary encoding so identity is not color-alone
+COLORS = {"fcfs": "#2a78d6", "jsq": "#eb6834",
+          "pod2": "#1baf7a", "bfio_h0": "#eda100"}
+MARKERS = {"fcfs": "o", "jsq": "s", "pod2": "^", "bfio_h0": "D"}
+
+QUICK = dict(Gs=[4, 16, 64], B=8, n_rounds=2.0)
+FULL = dict(Gs=[4, 16, 64], B=16, n_rounds=3.0)
+
+# NB: in this engine FCFS (most free slots) and JSQ (fewest active) pick
+# the same worker by construction — argmax(B - counts) == argmin(counts)
+# with identical tie-breaks — so their lines coincide exactly; the paper
+# groups them as the size-agnostic cluster.  BF-IO separates from the
+# cluster as G grows (imbalance), matching the simulator sweeps.
+
+
+def _requests(G: int, B: int, n_rounds: float, seed: int):
+    """Bimodal prompts + geometric decode lengths: the heterogeneous
+    regime where routing matters."""
+    from repro.serving import ServeRequest
+
+    rng = np.random.default_rng(seed)
+    n = int(G * B * n_rounds)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(40, 60)) if i % 3 == 0 \
+            else int(rng.integers(4, 12))
+        out.append(ServeRequest(
+            rid=i, tokens=rng.integers(1, 128, size=plen),
+            max_new_tokens=int(min(3 + rng.geometric(0.12), 40))))
+    return out
+
+
+def run(full: bool = False, seed: int = 11) -> list[dict]:
+    from .balancer_bench import _engine_setup
+    from repro.core import make_policy
+    from repro.serving import EngineConfig, ServingEngine
+
+    p = FULL if full else QUICK
+    st = _engine_setup()
+    rows = []
+    for G in p["Gs"]:
+        for name in POLICIES:
+            ec = EngineConfig(n_workers=G, slots_per_worker=p["B"],
+                              max_seq_len=64)
+            eng = ServingEngine(st["cfg"], st["params"], ec,
+                                make_policy(name), mesh=st["mesh"])
+            for r in _requests(G, p["B"], p["n_rounds"], seed):
+                eng.submit(r)
+            t0 = time.time()
+            s = eng.run(max_steps=200_000)
+            wall = time.time() - t0
+            row = {"G": G, "B": p["B"], "policy": s["policy"],
+                   "steps": s["steps"], "time_s": s["time_s"],
+                   "tokens": s["tokens"],
+                   "throughput_tok_s": s["throughput_tok_s"],
+                   "energy_j": s["energy_j"],
+                   "energy_j_per_tok": s["energy_j"] / max(s["tokens"], 1),
+                   "avg_imbalance": s["avg_imbalance"],
+                   "wall_s": wall}
+            rows.append(row)
+            print(f"  G={G:<3d} {row['policy']:>8s}: "
+                  f"imb={row['avg_imbalance']:8.1f} "
+                  f"E/tok={row['energy_j_per_tok']:.3f} J "
+                  f"thr={row['throughput_tok_s']:8.0f} tok/s "
+                  f"({wall:.1f}s wall)", flush=True)
+    save_rows("fig_engine_sweep", rows,
+              meta=dict(B=p["B"], n_rounds=p["n_rounds"],
+                        engine="ServingEngine vec/slot", policies=POLICIES))
+    _plot(rows)
+    return rows
+
+
+def _plot(rows: list[dict]) -> None:
+    """Three small multiples over G (one y-axis each, never dual-axis):
+    imbalance, energy per token, throughput."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception as e:  # matplotlib is optional tooling
+        print(f"  (figure skipped: matplotlib unavailable: {e})")
+        return
+
+    panels = [("avg_imbalance", "avg step imbalance I(k)", "log"),
+              ("energy_j_per_tok", "energy per token (J)", "linear"),
+              ("throughput_tok_s", "throughput (tok/s)", "linear")]
+    fig, axes = plt.subplots(1, 3, figsize=(10.5, 3.4))
+    Gs = sorted({r["G"] for r in rows})
+    for ax, (key, label, yscale) in zip(axes, panels):
+        for name in POLICIES:
+            ys = [next(r[key] for r in rows
+                       if r["G"] == G and r["policy"] == name) for G in Gs]
+            ax.plot(Gs, ys, color=COLORS[name], marker=MARKERS[name],
+                    markersize=5, linewidth=2, label=name)
+        ax.set_xscale("log", base=2)
+        ax.set_yscale(yscale)
+        ax.set_xticks(Gs, [str(g) for g in Gs])
+        ax.set_xlabel("workers G")
+        ax.set_title(label, fontsize=10, color="#333")
+        ax.grid(True, which="major", color="#e6e6e6", linewidth=0.7)
+        ax.tick_params(colors="#555", labelsize=8)
+        for side in ("top", "right"):
+            ax.spines[side].set_visible(False)
+        for side in ("left", "bottom"):
+            ax.spines[side].set_color("#cccccc")
+    axes[0].legend(frameon=False, fontsize=8, loc="upper left")
+    fig.suptitle("Routing policies on the real ServingEngine "
+                 "(tiny dense model, B slots/worker)", fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(RESULTS_DIR, "fig_engine_sweep.png")
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    print(f"  wrote {path}")
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_csv("fig_engine_sweep", rows,
+              ["G", "policy", "avg_imbalance", "energy_j_per_tok",
+               "throughput_tok_s"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

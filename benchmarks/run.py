@@ -19,8 +19,8 @@ def main() -> None:
                     help="comma-separated subset, e.g. table1,fig_idle")
     args = ap.parse_args()
 
-    from . import (fig_hsweep, fig_idle, fig_power, fig_scaling,
-                   interface_ablation, kernels_bench, table1,
+    from . import (fig_engine_sweep, fig_hsweep, fig_idle, fig_power,
+                   fig_scaling, interface_ablation, kernels_bench, table1,
                    theory_validation)
     suites = {
         "table1": table1.main,                 # Table 1
@@ -28,6 +28,7 @@ def main() -> None:
         "fig_power": fig_power.main,           # Figures 2 & 8
         "fig_hsweep": fig_hsweep.main,         # Figures 4 & 9
         "fig_scaling": fig_scaling.main,       # Figures 10 & 11
+        "fig_engine_sweep": fig_engine_sweep.main,  # real-engine sweep
         "theory": theory_validation.main,      # Thms 1-4, Cor 1
         "interface": interface_ablation.main,  # §7.3 + Thm 3 ablations
         "kernels": kernels_bench.main,         # kernel cost model

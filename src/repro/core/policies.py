@@ -32,7 +32,19 @@ __all__ = [
 
 @dataclasses.dataclass
 class SchedulerContext:
-    """Observable state handed to a policy at step k."""
+    """Observable state handed to a policy at step k.
+
+    When the serving engine runs chunked prefill (vLLM-style interleaving,
+    :mod:`repro.serving.scheduler`), admitted requests spend a few steps
+    mid-prefill before they start decoding.  Those jobs appear in the
+    ``active_*`` arrays with ``active_age == 0`` and their *current*
+    workload ``active_w`` equal to the prompt tokens prefilled so far;
+    ``active_prefill_remaining`` exposes the outstanding prompt tokens so
+    slice-aware policies can anticipate the load each worker is still
+    committed to absorb.  Engines without chunking pass zeros (and the
+    simulator omits the field entirely), so policies must treat ``None``
+    as "no prefill in flight".
+    """
 
     k: int
     loads: np.ndarray            # (G,) pre-admission workloads
@@ -46,6 +58,9 @@ class SchedulerContext:
     active_remaining: np.ndarray  # (m,) TRUE remaining steps (oracle use only)
     drift: DriftModel
     rng: np.random.Generator
+    # (m,) prompt tokens of each active job not yet prefilled (0 = job is
+    # decoding).  None when the runtime has no chunked prefill.
+    active_prefill_remaining: Optional[np.ndarray] = None
 
     @property
     def G(self) -> int:

@@ -24,6 +24,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-backend", default="slot",
+                    choices=["slot", "paged"],
+                    help="KV layout: contiguous per-slot rows or "
+                         "vLLM-style paged blocks")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: max prompt tokens per request "
+                         "per step (0 = synchronous)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="total prompt tokens per step across requests "
+                         "(0 = same as --prefill-chunk)")
     args = ap.parse_args()
 
     if args.smoke or jax.default_backend() == "cpu":
@@ -37,7 +47,9 @@ def main() -> None:
     eng = ServingEngine(
         cfg, params,
         EngineConfig(n_workers=args.workers, slots_per_worker=args.slots,
-                     max_seq_len=256),
+                     max_seq_len=256, cache_backend=args.cache_backend,
+                     prefill_chunk=args.prefill_chunk,
+                     prefill_budget=args.prefill_budget),
         make_policy(args.policy), mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
@@ -53,6 +65,12 @@ def main() -> None:
           f"{stats['throughput_tok_s']:.1f} tok/s, "
           f"E={stats['energy_j']:.1f} J, "
           f"avg imbalance {stats['avg_imbalance']:.1f}")
+    if args.cache_backend == "paged":
+        dense = eng.backend.pool_bytes()  # slot layout keeps this resident
+        print(f"[serve] paged KV: peak resident "
+              f"{eng.kv_peak_bytes / 1e6:.2f} MB "
+              f"({eng.kv_peak_bytes / max(dense, 1):.1%} of the "
+              f"{dense / 1e6:.2f} MB the slot layout pins)")
 
 
 if __name__ == "__main__":

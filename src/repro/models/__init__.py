@@ -2,10 +2,14 @@
 model assembly (init / loss / prefill / decode)."""
 from .layers import Param, merge_params, split_params  # noqa: F401
 from .transformer import (  # noqa: F401
+    chunk_prefill_fn,
     decode_fn,
     init_cache,
     init_params,
     layer_pattern,
     loss_fn,
+    paged_chunk_prefill_fn,
+    paged_decode_fn,
     prefill_fn,
+    supports_paged_stack,
 )

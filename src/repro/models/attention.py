@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from ._compat import shard_map
 
-__all__ = ["causal_attention", "cross_attention", "decode_attention"]
+__all__ = ["causal_attention", "chunk_attention", "cross_attention",
+           "decode_attention"]
 
 _NEG = -1e30
 
@@ -223,6 +224,42 @@ def causal_attention(
         outs.append(o)
     out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
     return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def chunk_attention(q, k_cache, v_cache, *, q_pos, kv_len):
+    """Mid-prefill chunk attention with per-row query offsets.
+
+    One prompt *chunk* (chunked prefill) attends against everything written
+    to the row's KV cache so far — earlier chunks plus this chunk's own KV,
+    which the caller has already scattered into the cache.
+
+    q: (B, C, Hq, hd) — the chunk's queries, right-padded per row;
+    k_cache, v_cache: (B, L, Hkv, hd) — the full per-row cache buffers;
+    q_pos: (B, C) absolute position of each query token;
+    kv_len: (B,) valid cache length *including* this chunk.
+
+    Unlike :func:`causal_attention` the query offset is per-row (rows of a
+    chunk batch sit at different prefill depths), so the causal frontier is
+    ``kv_pos <= q_pos[b, i]``.  Padded query columns produce garbage rows
+    that the caller drops.  Direct (non-flash) fp32 softmax: chunk sizes
+    are bounded by the scheduler's per-step budget, so the score tile is
+    (B, Hkv, G, C, L) with small C.
+    """
+    b, c, hq, hd = q.shape
+    L, hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qf = _group_q(q, hkv).astype(jnp.float32) * scale    # (B,C,Hkv,G,hd)
+    s = jnp.einsum("bqhgd,blhd->bhgql", qf,
+                   k_cache.astype(jnp.float32))          # (B,Hkv,G,C,L)
+    kv_pos = jnp.arange(L)
+    mask = ((kv_pos[None, None, :] <= q_pos[:, :, None])
+            & (kv_pos[None, None, :] < kv_len[:, None, None]))  # (B,C,L)
+    s = jnp.where(mask[:, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgql,blhd->bhgqd", p,
+                     v_cache.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, c, hq, hd)
+    return out.astype(q.dtype)
 
 
 def cross_attention(q, k, v, *, lengths: Optional[jnp.ndarray] = None):

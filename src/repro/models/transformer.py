@@ -817,6 +817,223 @@ def prefill_fn(cfg: ModelConfig, params, batch, *, max_len: int,
     return _lm_logits(cfg, params, x_last), cache
 
 
+# ==========================================================================
+# Chunked prefill + paged decode (attention-family stacks)
+#
+# These paths serve the pluggable cache backends of
+# :mod:`repro.serving.cache_backend`:
+#
+#   * ``chunk_prefill_fn``       — process ONE prompt chunk per row against
+#     contiguous per-slot cache rows (slot backend, chunked prefill);
+#   * ``paged_decode_fn``        — one-token decode reading/writing KV
+#     through a vLLM-style block table over a shared pool;
+#   * ``paged_chunk_prefill_fn`` — prompt chunks over the paged pool.
+#
+# All three support only homogeneous attention stacks (dense / moe / vlm
+# decoders: ``layer_pattern == [("blocks", "attn", n)]``); SSM/hybrid
+# recurrences and audio cross-attention carry extra cache state that has
+# no paged layout yet.
+# ==========================================================================
+
+def supports_paged_stack(cfg: ModelConfig) -> bool:
+    """True iff the decoder is a single homogeneous attention stack whose
+    KV cache is pure (k, v) pairs — the families the chunked/paged serving
+    paths can drive."""
+    return (cfg.family in ("dense", "moe", "vlm")
+            and not cfg.sliding_window
+            and layer_pattern(cfg) == [("blocks", "attn", cfg.n_layers)])
+
+
+def _require_paged_stack(cfg: ModelConfig, what: str) -> None:
+    if not supports_paged_stack(cfg):
+        raise ValueError(
+            f"{what} supports only attention-family models without a "
+            f"sliding window (dense/moe/vlm), got family={cfg.family!r} "
+            f"sliding_window={cfg.sliding_window}")
+
+
+def _chunk_qkv(cfg: ModelConfig, p, xx, sin, cos):
+    """Pre-attention half of an attn block: norm + q/k/v projection + rope."""
+    h = rms_norm(xx, p["norm1"], cfg.norm_eps)
+    ap = p["attn"]
+    q = apply_rope(linear(h, ap["wq"], ap.get("bq")), sin, cos)
+    k = apply_rope(linear(h, ap["wk"], ap.get("bk")), sin, cos)
+    v = linear(h, ap["wv"], ap.get("bv"))
+    return q, k, v
+
+
+def _chunk_finish(cfg: ModelConfig, p, xx, o, *, mesh, batch_axes):
+    """Post-attention half: output projection + (MoE-)FFN residual."""
+    ap = p["attn"]
+    xx = xx + linear(o.reshape(o.shape[:-2] + (-1,)),
+                     ap["wo"].reshape(-1, cfg.d_model))
+    h2 = rms_norm(xx, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_ffn(h2, p["ffn"], n_experts=cfg.n_experts,
+                       k=cfg.experts_per_token, mesh=mesh,
+                       batch_axes=batch_axes,
+                       capacity_factor=cfg.capacity_factor)
+    else:
+        y = _mlp_forward(cfg, p["ffn"], h2)
+    return xx + y
+
+
+def chunk_prefill_fn(cfg: ModelConfig, params, cache, tokens, offsets,
+                     chunk_lens, *, mesh=None, batch_axes=("data",)):
+    """Incremental prefill: run ONE chunk of each row's prompt against its
+    (already partially filled) contiguous cache row.
+
+    cache: gathered per-row cache slices {"lengths", "blocks": {"k", "v"}}
+    with k/v of shape (layers, n, L, Hkv, hd); tokens: (n, C) right-padded
+    chunk tokens; offsets: (n,) absolute position of each row's chunk
+    start; chunk_lens: (n,) valid tokens in this chunk (0 marks a padding
+    row — its cache writes are dropped and its logits are garbage).
+
+    Returns (last_logits (n, V) at each row's final chunk position,
+    updated cache slices with ``lengths = offsets + chunk_lens``).
+    """
+    _require_paged_stack(cfg, "chunk_prefill_fn")
+    n, C = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    posmat = offsets[:, None] + jnp.arange(C)[None, :]          # (n, C)
+    sin, cos = make_rope(posmat, cfg.hd, cfg.rope_theta)
+    kv_len = offsets + chunk_lens
+    L = cache["blocks"]["k"].shape[2]
+    # padding columns scatter to position L -> dropped by JAX semantics
+    wpos = jnp.where(jnp.arange(C)[None, :] < chunk_lens[:, None],
+                     posmat, L)
+    bidx = jnp.arange(n)
+
+    def layer(xx, xs):
+        p, c = xs
+        q, k, v = _chunk_qkv(cfg, p, xx, sin, cos)
+        kc = c["k"].at[bidx[:, None], wpos].set(k.astype(c["k"].dtype))
+        vc = c["v"].at[bidx[:, None], wpos].set(v.astype(c["v"].dtype))
+        o = attn_lib.chunk_attention(q, kc, vc, q_pos=posmat, kv_len=kv_len)
+        xx = _chunk_finish(cfg, p, xx, o, mesh=mesh, batch_axes=batch_axes)
+        return xx, {"k": kc, "v": vc}
+
+    x, ncs = jax.lax.scan(layer, x, (params["blocks"], cache["blocks"]))
+    idx = jnp.clip(chunk_lens - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    new_cache = dict(cache)
+    new_cache["blocks"] = ncs
+    new_cache["lengths"] = kv_len.astype(jnp.int32)
+    return _lm_logits(cfg, params, x_last), new_cache
+
+
+def _paged_contiguous(pool, bt, n, L):
+    """Gather a request-major contiguous view (n, L, Hkv, hd) of a paged
+    pool (n_blocks, block, Hkv, hd) through clipped block tables."""
+    return pool[bt].reshape(n, L, *pool.shape[2:])
+
+
+def paged_decode_fn(cfg: ModelConfig, params, k_pool, v_pool, tables,
+                    lengths, blk, off, tokens, *, block_size: int,
+                    attn_impl: str = "gather", mesh=None,
+                    batch_axes=("data",)):
+    """One decode step over a paged KV cache (vLLM block tables).
+
+    k_pool/v_pool: (layers, n_blocks, block, Hkv, hd); tables: (n,
+    max_blocks) int32 (-1 = unallocated); lengths: (n,) already counting
+    the new token; blk/off: (n,) physical (block, offset) of the new
+    token's KV (callers pass ``blk == n_blocks`` for padding rows, whose
+    writes are then dropped).  tokens: (n,) int32.
+
+    attn_impl:
+      * ``"gather"`` (default) — materialize each row's blocks as a
+        contiguous view and reuse :func:`attention.decode_attention`.
+        Because masked positions contribute exactly zero, this is
+        bit-identical to the contiguous slot cache whenever
+        ``max_blocks * block_size`` equals the slot cache length — the
+        parity oracle the engine tests rely on.
+      * ``"ref"``    — :func:`repro.serving.paged_cache
+        .paged_decode_attention_ref`, the standalone jnp oracle.
+      * ``"pallas"`` — the TPU kernel
+        (:mod:`repro.kernels.paged_attention`), which streams physical
+        blocks via scalar-prefetched block tables and never materializes
+        the contiguous view.
+
+    Returns (next_tokens (n,) int32 greedy, k_pool, v_pool).
+    """
+    _require_paged_stack(cfg, "paged_decode_fn")
+    if attn_impl not in ("gather", "ref", "pallas"):
+        raise ValueError(f"unknown attn_impl {attn_impl!r}")
+    n = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens[:, None])
+    pos = lengths - 1
+    sin, cos = make_rope(pos[:, None], cfg.hd, cfg.rope_theta)
+    nb_pool = k_pool.shape[1]
+    bt = jnp.clip(tables, 0, nb_pool - 1)
+    L = tables.shape[1] * block_size
+
+    def layer(xx, xs):
+        p, kp, vp = xs
+        q, k, v = _chunk_qkv(cfg, p, xx, sin, cos)
+        kp = kp.at[blk, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[blk, off].set(v[:, 0].astype(vp.dtype))
+        if attn_impl == "pallas":
+            from ..kernels.paged_attention import \
+                paged_decode_attention_pallas
+            o = paged_decode_attention_pallas(
+                q[:, 0], kp, vp, tables, lengths,
+                block_size=block_size)[:, None]
+        elif attn_impl == "ref":
+            from ..serving.paged_cache import paged_decode_attention_ref
+            o = paged_decode_attention_ref(
+                q[:, 0], kp, vp, tables, lengths, block_size)[:, None]
+        else:
+            kc = _paged_contiguous(kp, bt, n, L)
+            vc = _paged_contiguous(vp, bt, n, L)
+            o = attn_lib.decode_attention(q[:, 0], kc, vc, lengths)[:, None]
+        xx = _chunk_finish(cfg, p, xx, o, mesh=mesh, batch_axes=batch_axes)
+        return xx, (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(layer, x, (params["blocks"], k_pool,
+                                            v_pool))
+    nxt = jnp.argmax(_lm_logits(cfg, params, x[:, 0]), -1).astype(jnp.int32)
+    return nxt, kps, vps
+
+
+def paged_chunk_prefill_fn(cfg: ModelConfig, params, k_pool, v_pool, tables,
+                           tokens, offsets, chunk_lens, wblk, woff, *,
+                           block_size: int, mesh=None,
+                           batch_axes=("data",)):
+    """Chunked prefill over the paged pool: scatter each chunk's KV into
+    the rows' blocks, then attend through a gathered contiguous view.
+
+    wblk/woff: (n, C) physical (block, offset) of every chunk token
+    (padding columns carry ``wblk == n_blocks`` -> dropped writes).
+    Returns (last_logits (n, V), k_pool, v_pool).
+    """
+    _require_paged_stack(cfg, "paged_chunk_prefill_fn")
+    n, C = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    posmat = offsets[:, None] + jnp.arange(C)[None, :]
+    sin, cos = make_rope(posmat, cfg.hd, cfg.rope_theta)
+    kv_len = offsets + chunk_lens
+    nb_pool = k_pool.shape[1]
+    bt = jnp.clip(tables, 0, nb_pool - 1)
+    L = tables.shape[1] * block_size
+
+    def layer(xx, xs):
+        p, kp, vp = xs
+        q, k, v = _chunk_qkv(cfg, p, xx, sin, cos)
+        kp = kp.at[wblk, woff].set(k.astype(kp.dtype))
+        vp = vp.at[wblk, woff].set(v.astype(vp.dtype))
+        kc = _paged_contiguous(kp, bt, n, L)
+        vc = _paged_contiguous(vp, bt, n, L)
+        o = attn_lib.chunk_attention(q, kc, vc, q_pos=posmat, kv_len=kv_len)
+        xx = _chunk_finish(cfg, p, xx, o, mesh=mesh, batch_axes=batch_axes)
+        return xx, (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(layer, x, (params["blocks"], k_pool,
+                                            v_pool))
+    idx = jnp.clip(chunk_lens - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return _lm_logits(cfg, params, x_last), kps, vps
+
+
 def decode_fn(cfg: ModelConfig, params, cache, tokens, *, mesh=None,
               batch_axes=("data",), kv_shard="none"):
     """One decode step.  tokens: (B,) int32 — the tokens sampled last step.

@@ -1,0 +1,434 @@
+"""Pluggable KV-cache backends for the serving engine.
+
+The engine's barrier-step loop needs exactly four things from its memory
+substrate: write an admitted request's prefill KV, advance a prompt chunk
+(chunked prefill), decode one token for a compacted set of slots, and
+release a finished slot.  :class:`CacheBackend` is that seam; the engine
+(:mod:`repro.serving.engine`) owns scheduling and request bookkeeping and
+never touches cache layout.
+
+Two implementations ship in-tree, selected by
+``EngineConfig.cache_backend``:
+
+* :class:`SlotCacheBackend` (``"slot"``) — the contiguous per-slot layout
+  the engine grew up with: one flat ``init_cache`` pytree over all
+  ``G * B`` slots, compact decode by gather/scatter of whole cache rows.
+  Simple, but reserves ``max_seq_len`` KV per slot forever and copies
+  full rows to compact.
+* :class:`PagedCacheBackend` (``"paged"``) — vLLM-style paging over
+  :class:`~repro.serving.paged_cache.PagedKVCache`: fixed-size KV blocks
+  from a shared pool, per-slot block tables, resident KV proportional to
+  *actual* tokens.  Decode runs through the paged attention path
+  (:func:`repro.models.paged_decode_fn`): the ``"gather"`` oracle on CPU
+  (bit-identical to the slot backend by construction), the Pallas kernel
+  (:mod:`repro.kernels.paged_attention`) on TPU.  Attention-family models
+  only (dense / moe / vlm) — recurrent-state families have no paged
+  layout.
+
+Adding a backend
+----------------
+Subclass :class:`CacheBackend`, implement the five abstract methods, and
+register a name in :func:`make_cache_backend`.  The contract the engine
+relies on:
+
+* ``decode`` is called with a *bucketed* batch size ``nb >= n`` (the
+  engine pads compact batches to a small ladder of sizes so jit
+  recompiles stay bounded); rows beyond ``n`` are padding whose writes
+  must be dropped and whose outputs are discarded.
+* ``prefill_chunk`` rows with ``slots[i] < 0`` are padding under the same
+  convention.
+* All methods are synchronous with respect to the host arrays the engine
+  reads (``lengths`` bookkeeping must be visible immediately after the
+  call returns).
+"""
+from __future__ import annotations
+
+import abc
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import (
+    chunk_prefill_fn,
+    decode_fn,
+    init_cache,
+    paged_chunk_prefill_fn,
+    paged_decode_fn,
+    supports_paged_stack,
+)
+from .paged_cache import PagedKVCache
+
+__all__ = ["CacheBackend", "SlotCacheBackend", "PagedCacheBackend",
+           "make_cache_backend"]
+
+
+# ----------------------------------------------------------------------
+# Shared gather/scatter helpers + jitted model entry points (cached at
+# module level so engines over the same (cfg, mesh) share compilations).
+# ----------------------------------------------------------------------
+
+def gather_rows(cache, idx):
+    """Gather cache rows ``idx``: batch is dim 0 for 1-d leaves (lengths),
+    dim 1 for stacked (layers, batch, ...) leaves."""
+    return jax.tree.map(
+        lambda a: a[idx] if a.ndim == 1 else a[:, idx], cache)
+
+
+def scatter_rows(cache, sub, dst):
+    """Write sub-batch rows back at ``dst`` (out-of-bounds entries of
+    ``dst`` are dropped by JAX scatter semantics — used for padding)."""
+    def put(full, part):
+        if full.ndim == 1:
+            return full.at[dst].set(part.astype(full.dtype))
+        return full.at[:, dst].set(part.astype(full.dtype))
+    return jax.tree.map(put, cache, sub)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode_full(cfg: ModelConfig, mesh):
+    """Full-batch decode with fused greedy sampling: (tokens, cache).
+
+    The cache argument is donated: the caller always replaces its cache
+    with the returned one, so the old buffers can be reused in place."""
+    def f(p, c, t):
+        logits, c2 = decode_fn(cfg, p, c, t, mesh=mesh)
+        return jnp.argmax(logits, -1).astype(jnp.int32), c2
+    return jax.jit(f, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode_compact(cfg: ModelConfig, mesh):
+    """Compact decode: gather rows ``idx`` out of the flat cache, decode
+    only those, scatter the updated rows back at ``dst``.  Padding rows
+    carry ``dst == N`` so their writes are dropped."""
+    def f(p, cache, toks, idx, dst):
+        sub = gather_rows(cache, idx)
+        logits, new_sub = decode_fn(cfg, p, sub, toks, mesh=mesh)
+        return (jnp.argmax(logits, -1).astype(jnp.int32),
+                scatter_rows(cache, new_sub, dst))
+    return jax.jit(f, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_chunk_prefill(cfg: ModelConfig, mesh):
+    """Chunked prefill over contiguous rows: gather the chunking slots'
+    rows, advance one chunk, scatter back (pads at ``dst == N``)."""
+    def f(p, cache, toks, offs, clens, idx, dst):
+        sub = gather_rows(cache, idx)
+        logits, new_sub = chunk_prefill_fn(cfg, p, sub, toks, offs, clens,
+                                           mesh=mesh)
+        return logits, scatter_rows(cache, new_sub, dst)
+    return jax.jit(f, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_decode(cfg: ModelConfig, mesh, block_size: int,
+                         attn_impl: str):
+    def f(p, kp, vp, tables, lengths, blk, off, toks):
+        return paged_decode_fn(cfg, p, kp, vp, tables, lengths, blk, off,
+                               toks, block_size=block_size,
+                               attn_impl=attn_impl, mesh=mesh)
+    return jax.jit(f, donate_argnums=(1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_chunk(cfg: ModelConfig, mesh, block_size: int):
+    def f(p, kp, vp, tables, toks, offs, clens, wblk, woff):
+        return paged_chunk_prefill_fn(cfg, p, kp, vp, tables, toks, offs,
+                                      clens, wblk, woff,
+                                      block_size=block_size, mesh=mesh)
+    return jax.jit(f, donate_argnums=(1, 2))
+
+
+# ----------------------------------------------------------------------
+# Protocol
+# ----------------------------------------------------------------------
+
+class CacheBackend(abc.ABC):
+    """Memory-layout seam between the serving engine and the model.
+
+    Implementations own the physical KV storage and the model calls that
+    read/write it; the engine owns slots, scheduling, and metrics.  See
+    the module docstring for the padding conventions.
+    """
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def write_prefill(self, mini_cache, src: np.ndarray,
+                      dst: np.ndarray) -> None:
+        """Install prefill output: copy rows ``src`` of ``mini_cache``
+        (a ``prefill_fn`` cache over the admitted batch) into slots
+        ``dst``."""
+
+    @abc.abstractmethod
+    def prefill_chunk(self, toks: np.ndarray, offs: np.ndarray,
+                      clens: np.ndarray, slots: np.ndarray) -> np.ndarray:
+        """Advance one prompt chunk per row and return each row's logits
+        at its final chunk position, shape (rows, vocab).  ``toks`` is
+        (rows, C) right-padded; ``offs``/``clens`` give each chunk's
+        start position and valid length; ``slots[i] < 0`` marks padding
+        rows."""
+
+    @abc.abstractmethod
+    def decode(self, slot_tokens: np.ndarray, active_idx: np.ndarray,
+               bucket: int) -> np.ndarray:
+        """One greedy decode token for each slot in ``active_idx``
+        (batched at size ``bucket``); returns (n,) int32 next tokens and
+        updates the stored KV in place."""
+
+    @abc.abstractmethod
+    def release(self, slots: np.ndarray) -> None:
+        """Free finished slots' KV."""
+
+    @abc.abstractmethod
+    def resident_kv_bytes(self) -> int:
+        """Bytes of KV currently held for live requests."""
+
+
+# ----------------------------------------------------------------------
+# Contiguous per-slot backend (the extracted seed layout)
+# ----------------------------------------------------------------------
+
+class SlotCacheBackend(CacheBackend):
+    """Contiguous per-slot cache: one flat ``init_cache`` pytree over all
+    N slots, compact decode via gather/scatter of whole cache rows.
+
+    This is the seed engine's layout extracted behind the protocol; the
+    ref engine mode drives ``self.cache`` directly (its per-slot loops
+    are the live parity oracle)."""
+
+    name = "slot"
+
+    def __init__(self, cfg: ModelConfig, params, ec, mesh):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.N = ec.n_workers * ec.slots_per_worker
+        self.cache = init_cache(cfg, self.N, ec.max_seq_len)
+        self._decode_full = _jitted_decode_full(cfg, mesh)
+        self._decode_compact = _jitted_decode_compact(cfg, mesh)
+        self._chunk = _jitted_chunk_prefill(cfg, mesh)
+        self._bytes = int(sum(
+            a.nbytes for a in jax.tree.leaves(self.cache)))
+
+    def write_prefill(self, mini_cache, src, dst) -> None:
+        """ONE gather + scatter per cache leaf for the whole admitted
+        batch.  Cache leaves are stacked (layers, batch, ...): batch is
+        dim 1, except 'lengths' (batch is dim 0)."""
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+
+        def copy(dst_leaf, src_leaf):
+            if dst_leaf.ndim == 1:       # lengths
+                return dst_leaf.at[dst].set(
+                    src_leaf[src].astype(dst_leaf.dtype))
+            s = src_leaf[:, src]
+            if s.shape[0] != dst_leaf.shape[0]:
+                raise ValueError("layer-count mismatch")
+            tail = dst_leaf.shape[2:]
+            if s.shape[2:] != tail:
+                # mini cache may carry a shorter kv-length dim (prefill pad)
+                pads = [(0, 0), (0, 0)] + [
+                    (0, tail[i] - s.shape[2 + i]) for i in range(len(tail))]
+                s = jnp.pad(s, pads)
+            return dst_leaf.at[:, dst].set(s.astype(dst_leaf.dtype))
+
+        self.cache = jax.tree.map(copy, self.cache, mini_cache)
+
+    def prefill_chunk(self, toks, offs, clens, slots) -> np.ndarray:
+        idx = np.maximum(slots, 0).astype(np.int32)
+        dst = np.where(slots >= 0, slots, self.N).astype(np.int32)
+        logits, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(offs, jnp.int32), jnp.asarray(clens, jnp.int32),
+            jnp.asarray(idx), jnp.asarray(dst))
+        return np.asarray(logits)
+
+    def decode(self, slot_tokens, active_idx, bucket) -> np.ndarray:
+        n = active_idx.size
+        if bucket >= self.N:
+            nxt_all, self.cache = self._decode_full(
+                self.params, self.cache, jnp.asarray(slot_tokens))
+            return np.asarray(nxt_all)[active_idx]
+        idx = np.zeros(bucket, dtype=np.int32)
+        idx[:n] = active_idx
+        dst = np.full(bucket, self.N, dtype=np.int32)  # pads: dropped
+        dst[:n] = active_idx
+        nxt_sub, self.cache = self._decode_compact(
+            self.params, self.cache,
+            jnp.asarray(slot_tokens[idx]),
+            jnp.asarray(idx), jnp.asarray(dst))
+        return np.asarray(nxt_sub)[:n]
+
+    def release(self, slots) -> None:
+        # rows are simply abandoned in place (stale KV is masked by
+        # lengths on the next occupant), exactly as the seed engine did
+        pass
+
+    def resident_kv_bytes(self) -> int:
+        return self._bytes
+
+
+# ----------------------------------------------------------------------
+# Paged backend (vLLM block tables over a shared pool)
+# ----------------------------------------------------------------------
+
+class PagedCacheBackend(CacheBackend):
+    """Paged KV: fixed-size blocks from a shared pool, per-slot block
+    tables, resident KV tracking actual tokens.
+
+    ``EngineConfig`` knobs: ``paged_block_size`` (tokens per block;
+    must divide ``max_seq_len`` so the gathered contiguous view matches
+    the slot layout bit-for-bit), ``paged_pool_blocks`` (0 = capacity for
+    every slot at ``max_seq_len``; smaller pools oversubscribe memory and
+    raise ``MemoryError`` on exhaustion — preemption is future work), and
+    ``paged_attn_impl`` (``"gather"`` CPU oracle / ``"ref"`` standalone
+    jnp oracle / ``"pallas"`` TPU kernel)."""
+
+    name = "paged"
+
+    def __init__(self, cfg: ModelConfig, params, ec, mesh):
+        if not supports_paged_stack(cfg):
+            raise ValueError(
+                "cache_backend='paged' supports only attention-family "
+                f"models (dense/moe/vlm, no sliding window); got "
+                f"{cfg.family!r}")
+        bs = int(ec.paged_block_size)
+        if ec.max_seq_len % bs != 0:
+            raise ValueError(
+                f"paged_block_size {bs} must divide max_seq_len "
+                f"{ec.max_seq_len}")
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.N = ec.n_workers * ec.slots_per_worker
+        self.block_size = bs
+        self.max_blocks = ec.max_seq_len // bs
+        n_blocks = int(ec.paged_pool_blocks) or self.N * self.max_blocks
+        self.kv = PagedKVCache.create(
+            n_layers=cfg.n_layers, n_blocks=n_blocks, block_size=bs,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            max_requests=self.N, max_blocks_per_req=self.max_blocks,
+            dtype=jnp.dtype(cfg.dtype))
+        self._decode_jit = _jitted_paged_decode(cfg, mesh, bs,
+                                                ec.paged_attn_impl)
+        self._chunk_jit = _jitted_paged_chunk(cfg, mesh, bs)
+
+    # -- helpers --------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return self.kv.allocator.n_blocks
+
+    def pool_bytes(self) -> int:
+        return int(self.kv.k_pool.nbytes + self.kv.v_pool.nbytes)
+
+    def _tables_for(self, slots: np.ndarray) -> np.ndarray:
+        out = np.full((slots.size, self.max_blocks), -1, np.int32)
+        valid = slots >= 0
+        out[valid] = self.kv.block_tables[slots[valid]]
+        return out
+
+    # -- protocol -------------------------------------------------------
+    def write_prefill(self, mini_cache, src, dst) -> None:
+        """Scatter the admitted batch's prefill KV into freshly allocated
+        blocks: ONE gather + scatter per pool (k and v) for the whole
+        batch, indexed block-wise."""
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        lens = np.asarray(mini_cache["lengths"])
+        bs = self.block_size
+        rows, blkpos, blocks = [], [], []
+        for i, s in zip(src, dst):
+            s = int(s)
+            self.kv.admit(s, int(lens[i]))
+            bl = self.kv.req_blocks[s]
+            rows.extend([int(i)] * len(bl))
+            blkpos.extend(range(len(bl)))
+            blocks.extend(bl)
+        k = mini_cache["blocks"]["k"]          # (layers, nb, S, Hkv, hd)
+        v = mini_cache["blocks"]["v"]
+        S = k.shape[2]
+        pad = (-S) % bs
+        if pad:
+            cfgpad = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            k = jnp.pad(k, cfgpad)
+            v = jnp.pad(v, cfgpad)
+        nblk = (S + pad) // bs
+        kb = k.reshape(k.shape[0], k.shape[1], nblk, bs, *k.shape[3:])
+        vb = v.reshape(*kb.shape)
+        rows = np.asarray(rows, np.int32)
+        blkpos = np.asarray(blkpos, np.int32)
+        blocks = np.asarray(blocks, np.int32)
+        dt = self.kv.k_pool.dtype
+        self.kv.k_pool = self.kv.k_pool.at[:, blocks].set(
+            kb[:, rows, blkpos].astype(dt))
+        self.kv.v_pool = self.kv.v_pool.at[:, blocks].set(
+            vb[:, rows, blkpos].astype(dt))
+
+    def prefill_chunk(self, toks, offs, clens, slots) -> np.ndarray:
+        bs = self.block_size
+        nb, C = toks.shape
+        for j in range(nb):
+            if slots[j] >= 0:
+                self.kv.ensure_capacity(int(slots[j]),
+                                        int(offs[j] + clens[j]))
+        tables = self._tables_for(slots)
+        posm = offs[:, None] + np.arange(C)[None, :]
+        validm = np.arange(C)[None, :] < clens[:, None]
+        bidx = np.clip(posm // bs, 0, self.max_blocks - 1)
+        wblk = np.where(validm,
+                        np.take_along_axis(tables, bidx, axis=1),
+                        self.n_blocks).astype(np.int32)
+        woff = (posm % bs).astype(np.int32)
+        logits, kp, vp = self._chunk_jit(
+            self.params, self.kv.k_pool, self.kv.v_pool,
+            jnp.asarray(tables), jnp.asarray(toks, jnp.int32),
+            jnp.asarray(offs, jnp.int32), jnp.asarray(clens, jnp.int32),
+            jnp.asarray(wblk), jnp.asarray(woff))
+        self.kv.k_pool, self.kv.v_pool = kp, vp
+        return np.asarray(logits)
+
+    def decode(self, slot_tokens, active_idx, bucket) -> np.ndarray:
+        n = active_idx.size
+        self.kv.append_tokens(active_idx)
+        lens = np.zeros(bucket, np.int32)
+        lens[:n] = self.kv.lengths[active_idx]
+        tables = np.full((bucket, self.max_blocks), -1, np.int32)
+        tables[:n] = self.kv.block_tables[active_idx]
+        pos = np.maximum(lens - 1, 0)
+        blk = np.full(bucket, self.n_blocks, np.int32)  # pads: dropped
+        # requests that outgrew max_seq_len keep decoding on frozen KV
+        # (write dropped), matching the slot layout's scatter overflow
+        in_cap = pos[:n] < self.max_blocks * self.block_size
+        blk[:n][in_cap] = tables[np.flatnonzero(in_cap),
+                                 pos[:n][in_cap] // self.block_size]
+        off = (pos % self.block_size).astype(np.int32)
+        toks = np.zeros(bucket, np.int32)
+        toks[:n] = slot_tokens[active_idx]
+        nxt, kp, vp = self._decode_jit(
+            self.params, self.kv.k_pool, self.kv.v_pool,
+            jnp.asarray(tables), jnp.asarray(lens), jnp.asarray(blk),
+            jnp.asarray(off), jnp.asarray(toks))
+        self.kv.k_pool, self.kv.v_pool = kp, vp
+        return np.asarray(nxt)[:n]
+
+    def release(self, slots) -> None:
+        for s in np.asarray(slots):
+            self.kv.release(int(s))
+
+    def resident_kv_bytes(self) -> int:
+        return self.kv.resident_bytes()
+
+
+def make_cache_backend(name: str, cfg: ModelConfig, params, ec,
+                       mesh) -> CacheBackend:
+    if name == "slot":
+        return SlotCacheBackend(cfg, params, ec, mesh)
+    if name == "paged":
+        return PagedCacheBackend(cfg, params, ec, mesh)
+    raise ValueError(f"unknown cache backend {name!r} "
+                     "(expected 'slot' or 'paged')")

@@ -37,14 +37,26 @@ class LoopState(NamedTuple):
     wait_remaining: jnp.ndarray  # (W,) i32
     tot_imbalance: jnp.ndarray  # () f32
     tot_steps: jnp.ndarray      # () i32
+    slot_prefill_left: jnp.ndarray  # (G*B,) f32 prompt work not yet done
 
 
 def make_device_serving_loop(G: int, B: int, wait_cap: int,
-                             swap_iters: int = 4):
+                             swap_iters: int = 4,
+                             prefill_budget: float = 0.0):
     """Returns jitted ``run(state, n_steps) -> state`` executing the
-    admit/decode/complete loop fully on device."""
+    admit/decode/complete loop fully on device.
+
+    ``prefill_budget > 0`` models chunked prefill (the host engine's
+    ``EngineConfig.prefill_chunk``): admitted slots start at zero load
+    and absorb at most ``prefill_budget`` prompt tokens per step
+    (greedily in flat slot order); a slot decodes only once its prefill
+    drains.  ``0`` keeps the seed semantics — the whole prompt lands in
+    the admission step.  The flag is a python constant, so the ``0``
+    path traces to exactly the original program.
+    """
     S = G * B
     slot_worker = jnp.asarray(slot_worker_map(G, B))
+    chunked = prefill_budget > 0
 
     def step(state: LoopState, _):
         # --- current loads ------------------------------------------------
@@ -66,33 +78,50 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
         # place admitted candidates into free slots of their worker:
         # slot rank within worker == assignment rank within worker
         def place(carry, i):
-            slot_active, slot_load, slot_rem, wp, wr = carry
+            slot_active, slot_load, slot_rem, wp, wr, pl = carry
             g = assign[i]
 
             def do_place(args):
-                slot_active, slot_load, slot_rem, wp, wr = args
+                slot_active, slot_load, slot_rem, wp, wr, pl = args
                 free = (~slot_active) & (slot_worker == g)
                 idx = jnp.argmax(free)          # first free slot of g
                 ok = free[idx]
                 slot_active = slot_active.at[idx].set(
                     jnp.where(ok, True, slot_active[idx]))
+                # chunked: admitted slots start empty and absorb their
+                # prompt under the per-step budget below
+                load0 = 0.0 if chunked else wp[i]
                 slot_load = slot_load.at[idx].set(
-                    jnp.where(ok, wp[i], slot_load[idx]))
+                    jnp.where(ok, load0, slot_load[idx]))
+                if chunked:
+                    pl = pl.at[idx].set(jnp.where(ok, wp[i], pl[idx]))
                 slot_rem = slot_rem.at[idx].set(
                     jnp.where(ok, wr[i], slot_rem[idx]))
                 wp = wp.at[i].set(jnp.where(ok, 0.0, wp[i]))
                 wr = wr.at[i].set(jnp.where(ok, 0, wr[i]))
-                return slot_active, slot_load, slot_rem, wp, wr
+                return slot_active, slot_load, slot_rem, wp, wr, pl
 
             return jax.lax.cond(g >= 0, do_place, lambda a: a,
                                 (slot_active, slot_load, slot_rem, wp,
-                                 wr)), None
+                                 wr, pl)), None
 
-        (slot_active, slot_load, slot_rem, wp, wr), _ = jax.lax.scan(
+        (slot_active, slot_load, slot_rem, wp, wr, pl), _ = jax.lax.scan(
             place,
             (state.slot_active, state.slot_load, state.slot_remaining,
-             state.wait_prefill, state.wait_remaining),
+             state.wait_prefill, state.wait_remaining,
+             state.slot_prefill_left),
             jnp.arange(wait_cap))
+
+        # --- chunked prefill: drain at most prefill_budget tokens ----------
+        if chunked:
+            left = jnp.where(slot_active, pl, 0.0)
+            cum = jnp.cumsum(left)
+            take = jnp.clip(prefill_budget - (cum - left), 0.0, left)
+            pl = pl - take
+            slot_load = slot_load + take
+            decoding = slot_active & (pl <= 0)
+        else:
+            decoding = slot_active
 
         # --- barrier step metrics ------------------------------------------
         loads = jax.ops.segment_sum(
@@ -101,14 +130,17 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
         imb = G * loads.max() - loads.sum()
 
         # --- token generation / completion / drift -------------------------
-        slot_rem = jnp.where(slot_active, slot_rem - 1, slot_rem)
-        done = slot_active & (slot_rem <= 0)
+        slot_rem = jnp.where(decoding, slot_rem - 1, slot_rem)
+        done = decoding & (slot_rem <= 0)
         slot_active = slot_active & ~done
-        slot_load = jnp.where(slot_active, slot_load + 1.0, 0.0)
+        slot_load = jnp.where(slot_active,
+                              jnp.where(decoding & ~done,
+                                        slot_load + 1.0, slot_load),
+                              0.0)
 
         return LoopState(slot_active, slot_load, slot_rem, wp, wr,
                          state.tot_imbalance + imb,
-                         state.tot_steps + 1), None
+                         state.tot_steps + 1, pl), None
 
     @functools.partial(jax.jit, static_argnames=("n_steps",))
     def run(state: LoopState, n_steps: int) -> LoopState:
@@ -134,4 +166,5 @@ def init_loop_state(G: int, B: int, wait_prefill, wait_remaining,
         wait_remaining=wr,
         tot_imbalance=jnp.zeros((), jnp.float32),
         tot_steps=jnp.zeros((), jnp.int32),
+        slot_prefill_left=jnp.zeros((S,), jnp.float32),
     )

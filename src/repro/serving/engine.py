@@ -1,4 +1,5 @@
-"""Multi-worker decode serving engine with pluggable routing.
+"""Multi-worker decode serving engine with pluggable routing, cache
+layout, and admission scheduling.
 
 This is the paper's system diagram (Fig. 3) as a runnable engine:
 
@@ -16,23 +17,31 @@ is the "data" mesh axis (each DP shard holds its own slots) and the same
 engine code drives the device-sharded batch.  The router's decision
 problem is *identical* in both cases — that is the point of the paper.
 
-Two hot-path implementations are kept in-tree (``EngineConfig.engine_mode``):
+``ServingEngine.step()`` is a thin driver over three seams:
 
-* ``"vec"`` (default) — numpy array state over the shared
-  :class:`~repro.serving.slot_table.SlotTable`, one batched gather/scatter
-  per cache leaf per admitted batch, and bucketed *compact decode*: only
-  the active slots (rounded up to a small set of batch buckets, so jit
-  recompiles stay bounded) are decoded instead of all G*B rows.
-* ``"ref"`` — the original per-slot Python loops and per-request cache
+* :class:`~repro.serving.scheduler.Scheduler` — wait queue, admission,
+  and the chunked-prefill budget (``EngineConfig.prefill_chunk`` /
+  ``prefill_budget``): with chunking on, an admission wave's prompts are
+  processed a bounded number of tokens per barrier step, interleaved
+  with decode, instead of stalling every active request for one huge
+  synchronous prefill.
+* :class:`~repro.serving.cache_backend.CacheBackend` — the memory
+  layout (``EngineConfig.cache_backend``): ``"slot"`` is the contiguous
+  per-slot cache (compact decode by row gather/scatter), ``"paged"`` is
+  vLLM-style block paging where resident KV tracks actual tokens and
+  compact decode follows block tables instead of copying rows.
+* ``EngineConfig.engine_mode``: ``"vec"`` (default) is the array hot
+  path over the shared :class:`~repro.serving.slot_table.SlotTable`;
+  ``"ref"`` is the original per-slot Python loops and per-request cache
   writes, kept as a live-measured regression oracle
-  (``benchmarks/balancer_bench.py`` section ``engine`` times both and
-  asserts stats parity).
+  (``benchmarks/balancer_bench.py`` sections ``engine`` and
+  ``engine_paged`` time the variants and assert stats parity).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +52,10 @@ from ..core.energy import A100_POWER, PowerModel
 from ..core.metrics import step_imbalance
 from ..core.policies import Policy, SchedulerContext
 from ..core.workload import DriftModel, drift_for_family
-from ..models import decode_fn, init_cache, prefill_fn
-from .slot_table import SlotTable, cap_assignment
+from ..models import decode_fn, prefill_fn, supports_paged_stack
+from .cache_backend import make_cache_backend
+from .scheduler import Scheduler
+from .slot_table import SlotTable
 
 __all__ = ["ServeRequest", "EngineConfig", "ServingEngine"]
 
@@ -79,29 +90,24 @@ class EngineConfig:
     power: PowerModel = A100_POWER
     greedy: bool = True             # greedy sampling
     engine_mode: str = "vec"        # "vec" (array hot path) | "ref" (seed)
+    cache_backend: str = "slot"     # "slot" (contiguous) | "paged" (vLLM)
+    # chunked prefill: 0 = synchronous (a request's whole prompt prefills
+    # in its admission step); c > 0 = at most c prompt tokens per job per
+    # step, interleaved with decode.  Setting only prefill_budget also
+    # turns chunking on, with chunk == budget.
+    prefill_chunk: int = 0
+    prefill_budget: int = 0         # total prompt tokens/step (0 -> chunk)
+    # paged-backend knobs
+    paged_block_size: int = 16      # tokens per KV block (divides max_seq)
+    paged_pool_blocks: int = 0      # 0 -> capacity for all slots at max_seq
+    paged_attn_impl: str = "gather"  # "gather" | "ref" | "pallas"
 
 
 # ----------------------------------------------------------------------
-# Jitted decode variants, cached at module level so engines over the same
-# (cfg, mesh) share compilations (the benchmark builds many engines).
+# Jitted model entry points kept at engine level (the ref decode path and
+# prefill are scheduling concerns, not cache-layout concerns); cached at
+# module level so engines over the same (cfg, mesh) share compilations.
 # ----------------------------------------------------------------------
-
-def _gather_rows(cache, idx):
-    """Gather cache rows ``idx``: batch is dim 0 for 1-d leaves (lengths),
-    dim 1 for stacked (layers, batch, ...) leaves."""
-    return jax.tree.map(
-        lambda a: a[idx] if a.ndim == 1 else a[:, idx], cache)
-
-
-def _scatter_rows(cache, sub, dst):
-    """Write sub-batch rows back at ``dst`` (out-of-bounds entries of
-    ``dst`` are dropped by JAX scatter semantics — used for padding)."""
-    def put(full, part):
-        if full.ndim == 1:
-            return full.at[dst].set(part.astype(full.dtype))
-        return full.at[:, dst].set(part.astype(full.dtype))
-    return jax.tree.map(put, cache, sub)
-
 
 @functools.lru_cache(maxsize=None)
 def _jitted_decode(cfg: ModelConfig, mesh):
@@ -110,36 +116,11 @@ def _jitted_decode(cfg: ModelConfig, mesh):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_decode_full(cfg: ModelConfig, mesh):
-    """Full-batch decode with fused greedy sampling: (tokens, cache).
-
-    The cache argument is donated: the caller always replaces its cache
-    with the returned one, so the old buffers can be reused in place."""
-    def f(p, c, t):
-        logits, c2 = decode_fn(cfg, p, c, t, mesh=mesh)
-        return jnp.argmax(logits, -1).astype(jnp.int32), c2
-    return jax.jit(f, donate_argnums=(1,))
-
-
-@functools.lru_cache(maxsize=None)
 def _jitted_prefill(cfg: ModelConfig, mesh, max_len: int):
     """Jitted prefill (vec path; the ref path keeps the seed's eager
     prefill).  Callers bucket the batch-size dim to bound recompiles."""
     return jax.jit(functools.partial(prefill_fn, cfg, max_len=max_len,
                                      mesh=mesh))
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_decode_compact(cfg: ModelConfig, mesh):
-    """Compact decode: gather rows ``idx`` out of the flat cache, decode
-    only those, scatter the updated rows back at ``dst``.  Padding rows
-    carry ``dst == N`` so their writes are dropped."""
-    def f(p, cache, toks, idx, dst):
-        sub = _gather_rows(cache, idx)
-        logits, new_sub = decode_fn(cfg, p, sub, toks, mesh=mesh)
-        return (jnp.argmax(logits, -1).astype(jnp.int32),
-                _scatter_rows(cache, new_sub, dst))
-    return jax.jit(f, donate_argnums=(1,))
 
 
 def _decode_buckets(N: int) -> list[int]:
@@ -159,22 +140,41 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  policy: Policy, *, mesh=None, drift: DriftModel = None):
-        if engine_cfg.engine_mode not in ("vec", "ref"):
+        ec = engine_cfg
+        if ec.engine_mode not in ("vec", "ref"):
             raise ValueError(
                 f"engine_mode must be 'vec' or 'ref', got "
-                f"{engine_cfg.engine_mode!r}")
+                f"{ec.engine_mode!r}")
+        # a budget alone turns chunking on (one chunk == the budget)
+        chunk = ec.prefill_chunk or ec.prefill_budget
+        if ec.engine_mode == "ref" and (ec.cache_backend != "slot"
+                                        or chunk):
+            raise ValueError(
+                "engine_mode='ref' is the seed oracle: it supports only "
+                "cache_backend='slot' with synchronous prefill")
+        if chunk and (cfg.family not in ("dense", "moe")
+                      or not supports_paged_stack(cfg)):
+            raise ValueError(
+                "chunked prefill needs a homogeneous attention decoder "
+                "without a sliding window whose prompt embeds tokens "
+                f"only (dense/moe); got family={cfg.family!r} "
+                f"sliding_window={cfg.sliding_window}")
         self.cfg = cfg
         self.params = params
-        self.ec = engine_cfg
+        self.ec = ec
         self.policy = policy
         self.mesh = mesh
         self.drift = drift or drift_for_family(cfg.family)
-        G, B = engine_cfg.n_workers, engine_cfg.slots_per_worker
+        G, B = ec.n_workers, ec.slots_per_worker
         self.G, self.B = G, B
         N = G * B
         self.N = N
-        # one flat cache over all slots; slot s belongs to worker s // B
-        self.cache = init_cache(cfg, N, engine_cfg.max_seq_len)
+        self.backend = make_cache_backend(ec.cache_backend, cfg, params,
+                                          ec, mesh)
+        self.scheduler = Scheduler(policy,
+                                   prefill_chunk=min(chunk,
+                                                     ec.max_seq_len),
+                                   prefill_budget=ec.prefill_budget)
         self.table = SlotTable(G, B)
         self.slot_req: list[Optional[ServeRequest]] = [None] * N
         self.slot_tokens = np.zeros(N, dtype=np.int32)   # next input token
@@ -184,24 +184,36 @@ class ServingEngine:
         self.slot_age = np.zeros(N, dtype=np.int64)      # len(generated)
         self.slot_max_new = np.zeros(N, dtype=np.int64)
         self.slot_eos = np.full(N, -1, dtype=np.int64)
-        self.wait: list[ServeRequest] = []
         self.t_now = 0.0
         self.steps = 0
         self.energy_j = 0.0
         self.imbalance_sum = 0.0
         self.tokens_out = 0
+        self.kv_peak_bytes = 0
         self.rng = np.random.default_rng(0)
 
         self._decode = _jitted_decode(cfg, mesh)
-        self._decode_full = _jitted_decode_full(cfg, mesh)
-        self._decode_compact = _jitted_decode_compact(cfg, mesh)
-        self._prefill = _jitted_prefill(cfg, mesh, engine_cfg.max_seq_len)
+        self._prefill = _jitted_prefill(cfg, mesh, ec.max_seq_len)
         self._buckets = _decode_buckets(N)
 
     # ------------------------------------------------------------------
+    @property
+    def cache(self):
+        """The slot backend's flat cache pytree (ref-path and test
+        access); the paged backend holds pools instead."""
+        return self.backend.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.backend.cache = value
+
+    @property
+    def wait(self) -> list:
+        return self.scheduler.wait
+
     def submit(self, req: ServeRequest) -> None:
         req.t_submit = self.t_now
-        self.wait.append(req)
+        self.scheduler.submit(req)
 
     def _worker_of(self, slot: int) -> int:
         return slot // self.B
@@ -241,6 +253,7 @@ class ServingEngine:
             active_age = self.slot_age[act_idx]
             active_remaining = np.maximum(
                 self.slot_max_new[act_idx] - active_age, 1)
+            prefill_remaining = self.table.prefill_left[act_idx]
         else:
             act = [(s, r) for s, r in enumerate(self.slot_req)
                    if r is not None]
@@ -252,6 +265,7 @@ class ServingEngine:
             active_remaining = np.array(
                 [max(r.max_new_tokens - len(r.generated), 1)
                  for _, r in act], dtype=np.int64)
+            prefill_remaining = np.zeros(len(act), dtype=np.int64)
         ctx = SchedulerContext(
             k=self.steps,
             loads=loads,
@@ -265,20 +279,77 @@ class ServingEngine:
             active_remaining=active_remaining,
             drift=self.drift,
             rng=self.rng,
+            active_prefill_remaining=prefill_remaining,
         )
-        # a policy may over-subscribe a worker beyond its free slots; the
-        # excess requests simply keep waiting instead of crashing placement
-        assignment = cap_assignment(
-            np.asarray(self.policy.assign(ctx)), caps)
-        to_admit: list[tuple[ServeRequest, int]] = []
-        for pos, g in enumerate(assignment):
-            if g >= 0:
-                to_admit.append((self.wait[pos], int(g)))
+        to_admit = self.scheduler.admit(ctx, caps)
         if not to_admit:
             return
-        admitted = {id(r) for r, _ in to_admit}
-        self.wait = [r for r in self.wait if id(r) not in admitted]
-        self._prefill_batch(to_admit)
+        if self.scheduler.chunked:
+            # empty prompts have no chunk work to schedule; the
+            # synchronous path already handles them (prefill over an
+            # all-padding row), so route them there
+            empty = [(r, g) for r, g in to_admit if len(r.tokens) == 0]
+            chunked = [(r, g) for r, g in to_admit if len(r.tokens) > 0]
+            if chunked:
+                self._admit_chunked(chunked)
+            if empty:
+                self._prefill_batch(empty)
+        else:
+            self._prefill_batch(to_admit)
+
+    def _admit_chunked(self, items: list[tuple["ServeRequest", int]]) -> None:
+        """Chunked admission: claim slots and register prefill jobs; no
+        model work happens here — chunks run under the per-step budget."""
+        workers = np.array([g for _, g in items], dtype=np.int64)
+        slots = self.table.allocate(workers)
+        for i, (r, g) in enumerate(items):
+            slot = int(slots[i])
+            r.worker, r.slot = g, slot
+            self.slot_req[slot] = r
+            self.slot_load[slot] = 0.0
+            self.slot_age[slot] = 0
+            self.slot_max_new[slot] = r.max_new_tokens
+            self.slot_eos[slot] = r.eos_id
+            toks = np.asarray(r.tokens[:self.ec.max_seq_len],
+                              dtype=np.int32)
+            self.table.prefill_left[slot] = len(toks)
+            self.scheduler.register_job(slot, r, toks)
+
+    def _run_chunks(self) -> int:
+        """Advance mid-prefill jobs by at most the step budget; returns
+        the number of prompt tokens processed this step."""
+        plan = self.scheduler.plan_chunks()
+        if not plan:
+            return 0
+        rows = len(plan)
+        nbp = next(b for b in self._buckets if b >= rows)
+        C = self.scheduler.chunk
+        toks = np.zeros((nbp, C), dtype=np.int32)
+        offs = np.zeros(nbp, dtype=np.int32)
+        clens = np.zeros(nbp, dtype=np.int32)
+        slots = np.full(nbp, -1, dtype=np.int64)
+        for j, (slot, off, n) in enumerate(plan):
+            job = self.scheduler.job(slot)
+            toks[j, :n] = job.tokens[off:off + n]
+            offs[j], clens[j], slots[j] = off, n, slot
+        logits = self.backend.prefill_chunk(toks, offs, clens, slots)
+        total = 0
+        for j, (slot, off, n) in enumerate(plan):
+            total += n
+            finished = self.scheduler.advance(slot, n)
+            done = off + n
+            self.slot_load[slot] = float(done)
+            self.table.prefill_left[slot] = 0 if finished else \
+                self.scheduler.job(slot).remaining
+            if finished:
+                first = int(np.argmax(logits[j]))
+                r = self.slot_req[slot]
+                self.slot_tokens[slot] = first
+                self.slot_age[slot] = 1
+                r.generated.append(first)
+                if np.isnan(r.t_first_token):
+                    r.t_first_token = self.t_now
+        return total
 
     def _prefill_batch(self, items: list[tuple["ServeRequest", int]]) -> None:
         """Run prefill for admitted requests and write their cache slots.
@@ -352,41 +423,15 @@ class ServingEngine:
             if np.isnan(r.t_first_token):
                 r.t_first_token = self.t_now
         if ec.engine_mode == "vec":
-            self._copy_cache_batch(mini_cache, np.arange(nb), slots)
+            self.backend.write_prefill(mini_cache, np.arange(nb), slots)
         else:
             for i in range(nb):
                 self._copy_cache_slot(mini_cache, i, int(slots[i]))
 
-    def _copy_cache_batch(self, mini_cache, src: np.ndarray,
-                          dst: np.ndarray) -> None:
-        """Copy admitted requests' cache entries into the flat cache:
-        ONE gather + scatter per cache leaf for the whole batch.
-
-        Cache leaves are stacked (layers, batch, ...): batch is dim 1,
-        except 'lengths' (batch is dim 0)."""
-        src = jnp.asarray(src, jnp.int32)
-        dst = jnp.asarray(dst, jnp.int32)
-
-        def copy(dst_leaf, src_leaf):
-            if dst_leaf.ndim == 1:       # lengths
-                return dst_leaf.at[dst].set(
-                    src_leaf[src].astype(dst_leaf.dtype))
-            s = src_leaf[:, src]
-            if s.shape[0] != dst_leaf.shape[0]:
-                raise ValueError("layer-count mismatch")
-            tail = dst_leaf.shape[2:]
-            if s.shape[2:] != tail:
-                # mini cache may carry a shorter kv-length dim (prefill pad)
-                pads = [(0, 0), (0, 0)] + [
-                    (0, tail[i] - s.shape[2 + i]) for i in range(len(tail))]
-                s = jnp.pad(s, pads)
-            return dst_leaf.at[:, dst].set(s.astype(dst_leaf.dtype))
-
-        self.cache = jax.tree.map(copy, self.cache, mini_cache)
-
     def _copy_cache_slot(self, mini_cache, src: int, dst: int) -> None:
         """Seed path: copy one request's cache entry (one dispatch per
-        leaf per request — the vec path batches this)."""
+        leaf per request — the vec path batches this via
+        ``CacheBackend.write_prefill``)."""
         def copy(dst_leaf, src_leaf):
             if dst_leaf.ndim == 1:       # lengths
                 return dst_leaf.at[dst].set(src_leaf[src])
@@ -406,16 +451,21 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> dict:
-        """One barrier-synchronized decode step for all active requests."""
+        """One barrier-synchronized step: admission, at most
+        ``prefill_budget`` chunked-prefill tokens, and one decode token
+        for every active (non-prefilling) request."""
         self._admit()
+        chunk_tokens = self._run_chunks() if self.scheduler.chunked else 0
         vec = self.ec.engine_mode == "vec"
         if vec:
             active_idx = self.table.active_indices()
+            decode_idx = self.table.decode_indices() \
+                if self.scheduler.chunked else active_idx
             n_active = active_idx.size
         else:
-            active = [s for s, r in enumerate(self.slot_req)
-                      if r is not None]
-            n_active = len(active)
+            decode_idx = [s for s, r in enumerate(self.slot_req)
+                          if r is not None]
+            n_active = len(decode_idx)
         loads = self._loads()
         lmax = float(loads.max()) if n_active else 0.0
         dt = self.ec.step_overhead + self.ec.t_token * lmax
@@ -426,14 +476,20 @@ class ServingEngine:
         self.t_now += dt
         self.steps += 1
 
-        if n_active:
+        n_decode = len(decode_idx)
+        if n_decode:
             if vec:
-                self._decode_step_vec(active_idx)
+                self._decode_step_vec(np.asarray(decode_idx))
             else:
-                self._decode_step_ref(active)
+                self._decode_step_ref(decode_idx)
+        if self.ec.cache_backend == "paged":
+            self.kv_peak_bytes = max(self.kv_peak_bytes,
+                                     self.backend.resident_kv_bytes())
         return {"t": self.t_now, "active": n_active,
                 "waiting": len(self.wait), "max_load": lmax,
-                "imbalance": imb}
+                "imbalance": imb, "decoded": n_decode,
+                "prefill_tokens": chunk_tokens,
+                "prefilling": self.scheduler.n_prefilling}
 
     def _decode_step_ref(self, active: list[int]) -> None:
         """Seed decode path: always decode all G*B slots, per-slot loop."""
@@ -456,23 +512,12 @@ class ServingEngine:
 
     def _decode_step_vec(self, active_idx: np.ndarray) -> None:
         """Vectorized decode path: compact the active slots into the
-        smallest decode bucket and run the model only on those rows."""
+        smallest decode bucket and let the cache backend run the model
+        only on those rows (row gather/scatter for the slot backend,
+        block-table indirection for the paged backend)."""
         n = active_idx.size
         nb = next(b for b in self._buckets if b >= n)
-        if nb >= self.N:
-            nxt_all, self.cache = self._decode_full(
-                self.params, self.cache, jnp.asarray(self.slot_tokens))
-            nxt = np.asarray(nxt_all)[active_idx]
-        else:
-            idx = np.zeros(nb, dtype=np.int32)
-            idx[:n] = active_idx
-            dst = np.full(nb, self.N, dtype=np.int32)  # pads: dropped writes
-            dst[:n] = active_idx
-            nxt_sub, self.cache = self._decode_compact(
-                self.params, self.cache,
-                jnp.asarray(self.slot_tokens[idx]),
-                jnp.asarray(idx), jnp.asarray(dst))
-            nxt = np.asarray(nxt_sub)[:n]
+        nxt = self.backend.decode(self.slot_tokens, active_idx, nb)
 
         self.slot_tokens[active_idx] = nxt
         self.slot_load[active_idx] += self.drift.increment(self.steps)
@@ -489,6 +534,7 @@ class ServingEngine:
                 r.t_finish = self.t_now
                 self.slot_req[s] = None
             self.table.release(done_idx)
+            self.backend.release(done_idx)
 
     def run(self, max_steps: int = 10_000) -> dict:
         """Step until all submitted requests finish."""

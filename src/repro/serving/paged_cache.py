@@ -27,27 +27,56 @@ __all__ = ["BlockAllocator", "PagedKVCache", "paged_decode_attention_ref"]
 
 
 class BlockAllocator:
-    """Free-list allocator over a fixed pool of KV blocks (host side)."""
+    """Free-list allocator over a fixed pool of KV blocks (host side).
+
+    Blocks are reference-counted: ``alloc`` hands out blocks at refcount 1,
+    ``add_ref`` pins a block for sharing (prefix caching), and ``free``
+    decrements — a block returns to the free list only when its last
+    reference drops.  Freeing a block that is not allocated (double-free)
+    raises instead of silently pushing a duplicate id onto the free list,
+    which would later hand the same physical block to two requests and
+    corrupt both caches.
+    """
 
     def __init__(self, n_blocks: int):
         self.n_blocks = n_blocks
         self._free = list(range(n_blocks - 1, -1, -1))
+        self._refs = np.zeros(n_blocks, dtype=np.int32)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    def ref_count(self, block: int) -> int:
+        return int(self._refs[block])
+
     def alloc(self, n: int = 1) -> list[int]:
         if n > len(self._free):
             raise MemoryError(
                 f"KV pool exhausted: want {n}, have {len(self._free)}")
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        self._refs[out] = 1
+        return out
+
+    def add_ref(self, block: int) -> None:
+        """Pin an allocated block (shared prefix): one more ``free`` is
+        then needed before the block returns to the pool."""
+        if block < 0 or block >= self.n_blocks:
+            raise ValueError(f"bad block id {block}")
+        if self._refs[block] <= 0:
+            raise ValueError(f"add_ref on unallocated block {block}")
+        self._refs[block] += 1
 
     def free(self, blocks: list[int]) -> None:
         for b in blocks:
             if b < 0 or b >= self.n_blocks:
                 raise ValueError(f"bad block id {b}")
-            self._free.append(b)
+            if self._refs[b] <= 0:
+                raise ValueError(
+                    f"double free of block {b} (refcount already 0)")
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
 
 
 @dataclasses.dataclass
@@ -88,15 +117,52 @@ class PagedKVCache:
         self.req_blocks[slot] = blocks
 
     def append_token(self, slot: int) -> None:
-        """Grow by one token; allocate a new block at block boundaries."""
+        """Grow by one token; allocate a new block at block boundaries.
+        Same freeze-at-capacity overflow semantics as
+        :meth:`append_tokens` (a full block table stops growing)."""
         self.lengths[slot] += 1
         L = int(self.lengths[slot])
         n_have = len(self.req_blocks.get(slot, []))
-        n_need = -(-L // self.block_size)
+        n_need = min(-(-L // self.block_size), self.block_tables.shape[1])
         if n_need > n_have:
             new = self.allocator.alloc(n_need - n_have)
             self.block_tables[slot, n_have:n_need] = new
             self.req_blocks[slot].extend(new)
+
+    def append_tokens(self, slots: np.ndarray) -> None:
+        """Batched :meth:`append_token`: grow every slot in ``slots`` by
+        one token, allocating a block only for rows crossing a block
+        boundary (1/block_size of decode steps per slot).
+
+        A slot whose block table is already full stops growing: its
+        length keeps counting (positions matter for RoPE) but the
+        overflow token's KV has nowhere to land and is dropped — the
+        same freeze-at-capacity behavior as the contiguous slot layout,
+        whose writes past ``max_seq_len`` fall off the scatter."""
+        slots = np.asarray(slots)
+        self.lengths[slots] += 1
+        crossing = (self.lengths[slots] - 1) % self.block_size == 0
+        max_blocks = self.block_tables.shape[1]
+        for s in slots[crossing]:
+            s = int(s)
+            blocks = self.req_blocks[s]
+            if len(blocks) >= max_blocks:
+                continue  # table full: decode continues on frozen KV
+            new = self.allocator.alloc(1)
+            self.block_tables[s, len(blocks)] = new[0]
+            blocks.extend(new)
+
+    def ensure_capacity(self, slot: int, new_len: int) -> None:
+        """Grow a slot's block list to cover ``new_len`` tokens (chunked
+        prefill: blocks are allocated chunk by chunk, not all at
+        admission) and set its length."""
+        blocks = self.req_blocks.setdefault(slot, [])
+        need = -(-max(new_len, 1) // self.block_size)
+        if need > len(blocks):
+            new = self.allocator.alloc(need - len(blocks))
+            self.block_tables[slot, len(blocks):need] = new
+            blocks.extend(new)
+        self.lengths[slot] = new_len
 
     def release(self, slot: int) -> None:
         blocks = self.req_blocks.pop(slot, [])
@@ -104,9 +170,21 @@ class PagedKVCache:
         self.block_tables[slot, :] = -1
         self.lengths[slot] = 0
 
+    @property
+    def used_blocks(self) -> int:
+        return self.allocator.n_blocks - self.allocator.n_free
+
+    def resident_bytes(self) -> int:
+        """Bytes of KV actually occupied by live requests (both pools,
+        all layers) — the paging win is this scaling with tokens rather
+        than with n_slots * max_seq_len."""
+        layers = self.k_pool.shape[0]
+        per_block = int(np.prod(self.k_pool.shape[2:]))
+        return 2 * self.used_blocks * layers * per_block \
+            * self.k_pool.dtype.itemsize
+
     def utilization(self) -> float:
-        used = self.allocator.n_blocks - self.allocator.n_free
-        return used / max(self.allocator.n_blocks, 1)
+        return self.used_blocks / max(self.allocator.n_blocks, 1)
 
     # -- device-side ops ---------------------------------------------------
     def write_prompt(self, layer: int, slot: int, k: jnp.ndarray,

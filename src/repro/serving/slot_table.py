@@ -66,6 +66,11 @@ class SlotTable:
         self.worker = slot_worker_map(G, B)
         self.active = np.zeros(N, dtype=bool)
         self.load = np.zeros(N, dtype=np.float64)
+        # chunked prefill: prompt tokens of each slot not yet prefilled.
+        # An active slot with prefill_left > 0 holds a mid-prefill request
+        # (occupies capacity, contributes its partial load, does not
+        # decode).  Always zero when the engine runs synchronous prefill.
+        self.prefill_left = np.zeros(N, dtype=np.int64)
 
     # -- per-worker reductions -----------------------------------------
     def loads(self) -> np.ndarray:
@@ -86,6 +91,11 @@ class SlotTable:
     def active_indices(self) -> np.ndarray:
         """Ascending flat indices of active slots."""
         return np.flatnonzero(self.active)
+
+    def decode_indices(self) -> np.ndarray:
+        """Ascending flat indices of slots that are active AND done
+        prefilling — the set a barrier decode step runs over."""
+        return np.flatnonzero(self.active & (self.prefill_left == 0))
 
     @property
     def n_active(self) -> int:
@@ -116,3 +126,4 @@ class SlotTable:
     def release(self, slots: np.ndarray) -> None:
         self.active[slots] = False
         self.load[slots] = 0.0
+        self.prefill_left[slots] = 0

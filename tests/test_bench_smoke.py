@@ -17,7 +17,11 @@ def test_smoke_schema_and_finite_timings():
     doc2 = json.loads(json.dumps(doc))
     check(doc2)
     sections = {r["section"] for r in doc2["rows"]}
-    assert sections == {"solver", "simulator", "batch", "engine"}
+    assert sections == {"solver", "simulator", "batch", "engine",
+                        "engine_paged"}
+    kinds = {r.get("kind") for r in doc2["rows"]
+             if r["section"] == "engine_paged"}
+    assert kinds == {"grid", "stall"}
 
 
 def test_check_rejects_broken_docs():

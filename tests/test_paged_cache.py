@@ -36,6 +36,45 @@ class TestAllocator:
         with pytest.raises(ValueError):
             BlockAllocator(2).free([5])
 
+    def test_double_free_raises(self):
+        """Freeing twice must not silently duplicate ids on the free list
+        (the duplicate would later alias two requests' KV)."""
+        a = BlockAllocator(4)
+        x = a.alloc(2)
+        a.free(x)
+        with pytest.raises(ValueError, match="double free"):
+            a.free(x[:1])
+        assert a.n_free == 4  # free list not corrupted by the bad call
+
+    def test_free_unallocated_raises(self):
+        a = BlockAllocator(4)
+        with pytest.raises(ValueError, match="double free"):
+            a.free([0])  # never allocated
+
+    def test_still_referenced_block_not_returned(self):
+        """A shared (refcounted) block survives its first free."""
+        a = BlockAllocator(2)
+        (b,) = a.alloc(1)
+        a.add_ref(b)
+        assert a.ref_count(b) == 2
+        a.free([b])
+        assert a.n_free == 1          # still referenced -> not in pool
+        a.free([b])
+        assert a.n_free == 2          # last reference returns it
+        with pytest.raises(ValueError):
+            a.free([b])
+
+    def test_add_ref_unallocated_raises(self):
+        with pytest.raises(ValueError, match="unallocated"):
+            BlockAllocator(2).add_ref(0)
+
+    def test_freed_blocks_are_reusable(self):
+        a = BlockAllocator(2)
+        x = a.alloc(2)
+        a.free(x)
+        y = a.alloc(2)
+        assert sorted(y) == sorted(x)
+
 
 class TestPagedKernel:
     @pytest.mark.parametrize("B,Hq,Hkv,hd,bs,mb", [
