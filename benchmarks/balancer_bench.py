@@ -28,6 +28,16 @@ precisely for this):
   long prompts lands, synchronous prefill vs chunked
   (``prefill_chunk``) — chunking bounds the per-step prompt work so
   decode is never stalled behind a wave.
+* **engine_preempt** — the memory-pressure subsystem.  ``kind=
+  "pressure"`` rows: the same request stream through a pool sized at
+  ``pool_frac`` (0.5) of the unconstrained peak-resident demand, once per
+  ``preemption_mode`` — the engine must complete everything via
+  preemption (no MemoryError), swap mode bit-identical to the
+  unconstrained run (``gens_equal``), with throughput plus the
+  tokens-swapped vs tokens-recomputed trade recorded.  The
+  ``kind="prefix"`` row: a shared-system-prompt workload with
+  ``prefix_cache`` off vs on — block hit-rate, identical generations,
+  and the resident-KV reduction (``kv_bytes_ratio < 1``).
 
 Run:  PYTHONPATH=src python -m benchmarks.balancer_bench [--full] [--smoke]
 Writes BENCH_balancer.json at the repo root (and benchmarks/results/).
@@ -287,6 +297,112 @@ def _engine_paged_case(G: int, B: int, *, n_rounds: float = 1.0,
     return out
 
 
+def _engine_preempt_case(G: int, B: int, *, pool_frac: float = 0.5,
+                         n_rounds: float = 1.5, policy: str = "jsq",
+                         seed: int = 11) -> list[dict]:
+    """Memory pressure: pool at ``pool_frac`` of the unconstrained peak
+    resident demand; the engine completes the stream via preemption, swap
+    mode bit-identical to unconstrained.  Returns one row per mode."""
+    from repro.core import make_policy
+    from repro.serving import EngineConfig, ServingEngine
+
+    st = _engine_setup()
+
+    def one_run(mode, pool_blocks):
+        ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                          cache_backend="paged", paged_block_size=16,
+                          paged_pool_blocks=pool_blocks,
+                          preemption_mode=mode)
+        eng = ServingEngine(st["cfg"], st["params"], ec,
+                            make_policy(policy), mesh=st["mesh"])
+        reqs = _engine_requests(G, B, n_rounds=n_rounds, seed=seed)
+        for r in reqs:
+            eng.submit(r)
+        s = eng.run(max_steps=200_000)
+        return eng, s, [r.generated for r in reqs]
+
+    eng0, s0, gens0 = one_run("swap", 0)      # unconstrained baseline
+    blk_bytes = eng0.backend.pool_bytes() // eng0.backend.n_blocks
+    peak_blocks = -(-eng0.kv_peak_bytes // blk_bytes)
+    pool = max(int(peak_blocks * pool_frac), 4)
+    rows = []
+    for mode in ("swap", "recompute"):
+        one_run(mode, pool)  # warmup: compile every bucket this run hits
+        t0 = time.time()
+        eng, s, gens = one_run(mode, pool)
+        wall = time.time() - t0
+        rows.append({
+            "section": "engine_preempt", "kind": "pressure", "G": G,
+            "B": B, "policy": policy, "n_requests": int(G * B * n_rounds),
+            "mode": mode, "pool_frac": pool_frac, "pool_blocks": pool,
+            "peak_blocks_unconstrained": int(peak_blocks),
+            "steps": s["steps"], "steps_per_s": s["steps"] / max(wall, 1e-9),
+            "unconstrained_steps": s0["steps"],
+            "preemptions": s["preemptions"],
+            "tokens_swapped": s["tokens_swapped"],
+            "tokens_recomputed": s["tokens_recomputed"],
+            "completed": all(len(g) > 0 for g in gens),
+            "gens_equal": gens == gens0,
+        })
+    return rows
+
+
+def _engine_prefix_case(G: int, B: int, *, shared_len: int = 32,
+                        n_rounds: float = 1.5, policy: str = "jsq",
+                        seed: int = 13) -> dict:
+    """Prefix caching on a shared-system-prompt workload: block hit-rate,
+    identical generations, and the peak-resident-KV reduction."""
+    from repro.core import make_policy
+    from repro.serving import EngineConfig, ServeRequest, ServingEngine
+
+    st = _engine_setup()
+    n = int(G * B * n_rounds)
+
+    def reqs():
+        rng = np.random.default_rng(seed)
+        system = rng.integers(1, 128, size=shared_len)
+        return [ServeRequest(
+            rid=i,
+            tokens=np.concatenate(
+                [system, rng.integers(1, 128,
+                                      size=int(rng.integers(2, 10)))]),
+            max_new_tokens=int(min(3 + rng.geometric(0.2), 20)))
+            for i in range(n)]
+
+    out = {"section": "engine_preempt", "kind": "prefix", "G": G, "B": B,
+           "policy": policy, "n_requests": n, "shared_prefix_len": shared_len}
+    gens = {}
+    for on in (False, True):
+        ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                          cache_backend="paged", paged_block_size=16,
+                          prefix_cache=on)
+
+        def one_run():
+            eng = ServingEngine(st["cfg"], st["params"], ec,
+                                make_policy(policy), mesh=st["mesh"])
+            rs = reqs()
+            for r in rs:
+                eng.submit(r)
+            s = eng.run(max_steps=100_000)
+            return eng, s, [r.generated for r in rs]
+
+        one_run()  # warmup
+        t0 = time.time()
+        eng, s, gens[on] = one_run()
+        wall = time.time() - t0
+        key = "on" if on else "off"
+        out[f"steps_per_s_{key}"] = s["steps"] / max(wall, 1e-9)
+        out[f"kv_peak_bytes_{key}"] = int(eng.kv_peak_bytes)
+        if on:
+            out["prefix_hits"] = s["prefix_hits"]
+            out["prefix_queries"] = s["prefix_queries"]
+            out["prefix_hit_rate"] = s["prefix_hit_rate"]
+    out["kv_bytes_ratio"] = (out["kv_peak_bytes_on"]
+                             / max(out["kv_peak_bytes_off"], 1))
+    out["gens_equal"] = gens[False] == gens[True]
+    return out
+
+
 _STALL_STATE: dict = {}
 
 
@@ -403,6 +519,8 @@ def run(full: bool = False, smoke: bool = False,
         batch_grid = [(2, 4, 8)]
         engine_grid = [(2, 2)]
         paged_grid = [(2, 2)]
+        preempt_grid = [(2, 2)]
+        prefix_grid = [(2, 2)]
         stall_shape = (2, 2)
         stall_kw = dict(chunk=16, prompt_len=64, warm_n=2, repeats=1,
                         tiny_model=True)
@@ -414,6 +532,8 @@ def run(full: bool = False, smoke: bool = False,
         batch_grid = [(8, 64, 256)]
         engine_grid = [(G, B) for G in (4, 16, 64) for B in (8, 32)]
         paged_grid = [(G, B) for G in (4, 16, 64) for B in (8, 32)]
+        preempt_grid = [(4, 8), (16, 8)]
+        prefix_grid = [(4, 8)]
         stall_shape = (4, 8)
         stall_kw = dict(chunk=8, prompt_len=192, warm_n=16, repeats=7)
         n_rounds, iters = 4.0, 10
@@ -461,6 +581,22 @@ def run(full: bool = False, smoke: bool = False,
               f"paged={r['paged_steps_per_s']:7.1f} steps/s "
               f"kv={r['kv_bytes_ratio']:.2f}x of dense "
               f"equal={r['metrics_equal']}", flush=True)
+    for G, B in preempt_grid:
+        for r in _engine_preempt_case(G, B):
+            rows.append(r)
+            print(f"  preempt G={G:<3d} B={B:<3d} mode={r['mode']:<9s} "
+                  f"pool={r['pool_blocks']}/{r['peak_blocks_unconstrained']} "
+                  f"blocks preempts={r['preemptions']:<4d} "
+                  f"swapped={r['tokens_swapped']:<6d} "
+                  f"recomputed={r['tokens_recomputed']:<6d} "
+                  f"gens_equal={r['gens_equal']}", flush=True)
+    for G, B in prefix_grid:
+        r = _engine_prefix_case(G, B)
+        rows.append(r)
+        print(f"  prefix G={G:<3d} B={B:<3d} "
+              f"hit_rate={r['prefix_hit_rate']:.2f} "
+              f"kv={r['kv_bytes_ratio']:.2f}x of uncached "
+              f"gens_equal={r['gens_equal']}", flush=True)
     r = _engine_stall_case(*stall_shape, **stall_kw)
     rows.append(r)
     print(f"  stall  G={r['G']} B={r['B']} "
@@ -482,7 +618,9 @@ def run(full: bool = False, smoke: bool = False,
             "post": "tiled swap kernel with top-K pruning / vectorized "
                     "instant dispatch / slot-table engine with bucketed "
                     "compact decode / paged KV backend + chunked prefill "
-                    "(engine_paged section)",
+                    "(engine_paged section) / preemption + prefix "
+                    "caching under memory pressure (engine_preempt "
+                    "section)",
         },
         "rows": rows,
     }

@@ -33,6 +33,17 @@ PAGED_STALL_KEYS = {"G", "B", "prefill_chunk", "burst_prompts",
                     "stall_x_sync", "burst_steps_sync",
                     "steady_step_ms_chunked", "burst_max_step_ms_chunked",
                     "stall_x_chunked", "burst_steps_chunked"}
+PREEMPT_PRESSURE_KEYS = {"G", "B", "policy", "n_requests", "mode",
+                         "pool_frac", "pool_blocks",
+                         "peak_blocks_unconstrained", "steps",
+                         "steps_per_s", "unconstrained_steps",
+                         "preemptions", "tokens_swapped",
+                         "tokens_recomputed", "completed", "gens_equal"}
+PREEMPT_PREFIX_KEYS = {"G", "B", "policy", "n_requests",
+                       "shared_prefix_len", "steps_per_s_off",
+                       "steps_per_s_on", "kv_peak_bytes_off",
+                       "kv_peak_bytes_on", "prefix_hits", "prefix_queries",
+                       "prefix_hit_rate", "kv_bytes_ratio", "gens_equal"}
 
 
 def _finite_pos(x) -> bool:
@@ -48,10 +59,17 @@ def check(doc: dict) -> None:
     assert rows, "no benchmark rows"
     sections = {r.get("section") for r in rows}
     assert sections >= {"solver", "simulator", "batch", "engine",
-                        "engine_paged"}, sections
+                        "engine_paged", "engine_preempt"}, sections
     paged_kinds = {r.get("kind") for r in rows
                    if r.get("section") == "engine_paged"}
     assert paged_kinds == {"grid", "stall"}, paged_kinds
+    preempt_kinds = {r.get("kind") for r in rows
+                     if r.get("section") == "engine_preempt"}
+    assert preempt_kinds == {"pressure", "prefix"}, preempt_kinds
+    preempt_modes = {r.get("mode") for r in rows
+                     if r.get("section") == "engine_preempt"
+                     and r.get("kind") == "pressure"}
+    assert preempt_modes == {"swap", "recompute"}, preempt_modes
     for r in rows:
         sec = r["section"]
         if sec == "solver":
@@ -103,6 +121,39 @@ def check(doc: dict) -> None:
                 assert (r["stall_x_chunked"]
                         <= max(r["stall_x_sync"], 3.0)), \
                     (r["stall_x_chunked"], r["stall_x_sync"])
+        elif sec == "engine_preempt":
+            if r.get("kind") == "pressure":
+                assert PREEMPT_PRESSURE_KEYS <= set(r), \
+                    PREEMPT_PRESSURE_KEYS - set(r)
+                assert _finite_pos(r["steps_per_s"])
+                # the whole point: a pool at half the demand still serves
+                # the full stream through preemption, not MemoryError
+                assert r["completed"] is True
+                assert r["pool_blocks"] < r["peak_blocks_unconstrained"]
+                assert r["preemptions"] >= 0
+                assert r["tokens_swapped"] >= 0
+                assert r["tokens_recomputed"] >= 0
+                if r["mode"] == "swap":
+                    # host-staged blocks restore bit-for-bit, so a dense
+                    # model's outputs cannot depend on the preemptions
+                    assert r["gens_equal"] is True, \
+                        "swap preemption changed generations"
+                    assert r["tokens_recomputed"] == 0
+                else:
+                    assert r["tokens_swapped"] == 0
+            else:
+                assert r.get("kind") == "prefix", r.get("kind")
+                assert PREEMPT_PREFIX_KEYS <= set(r), \
+                    PREEMPT_PREFIX_KEYS - set(r)
+                assert _finite_pos(r["steps_per_s_on"])
+                assert _finite_pos(r["steps_per_s_off"])
+                assert 0.0 <= r["prefix_hit_rate"] <= 1.0
+                assert r["prefix_hit_rate"] > 0, \
+                    "shared-prefix workload produced no prefix hits"
+                # dedup must shrink resident KV on a shared-prefix stream
+                assert r["kv_bytes_ratio"] < 1.0, r["kv_bytes_ratio"]
+                assert r["gens_equal"] is True, \
+                    "prefix-cache hits changed generations"
 
 
 def run_smoke() -> dict:

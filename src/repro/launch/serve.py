@@ -1,5 +1,21 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --policy
-bfio_h20`` — drives the BF-IO-routed multi-worker engine end to end."""
+bfio_h20`` — drives the BF-IO-routed multi-worker engine end to end.
+
+Memory-pressure knobs (``--cache-backend paged`` only):
+
+* ``--pool-blocks N`` sizes the shared KV block pool below the
+  every-slot-at-max-seq default, oversubscribing memory the way real
+  engines do; on exhaustion the engine *preempts* a victim instead of
+  crashing.
+* ``--preemption-mode swap|recompute`` picks what happens to the
+  victim's KV: staged host-side and restored bit-for-bit on resume
+  (swap), or dropped and re-prefilled from prompt + generated tokens
+  (recompute).  ``--preemption-policy lifo|fifo|largest`` picks the
+  victim.
+* ``--prefix-cache`` shares identical prompt-prefix KV blocks across
+  requests (content-hash index, copy-on-write on the first divergent
+  append) — resident KV then scales with *unique* prefix content.
+"""
 from __future__ import annotations
 
 import argparse
@@ -34,6 +50,21 @@ def main() -> None:
     ap.add_argument("--prefill-budget", type=int, default=0,
                     help="total prompt tokens per step across requests "
                          "(0 = same as --prefill-chunk)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged KV pool size in blocks (0 = capacity for "
+                         "every slot at max_seq_len; smaller pools "
+                         "oversubscribe and trigger preemption)")
+    ap.add_argument("--preemption-mode", default="swap",
+                    choices=["swap", "recompute"],
+                    help="victim KV handling under memory pressure: swap "
+                         "to host staging (bit-exact resume) or drop and "
+                         "re-prefill on resume")
+    ap.add_argument("--preemption-policy", default="lifo",
+                    choices=["lifo", "fifo", "largest"],
+                    help="victim selection under memory pressure")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt-prefix KV blocks across "
+                         "requests (paged backend, copy-on-write)")
     args = ap.parse_args()
 
     if args.smoke or jax.default_backend() == "cpu":
@@ -49,7 +80,11 @@ def main() -> None:
         EngineConfig(n_workers=args.workers, slots_per_worker=args.slots,
                      max_seq_len=256, cache_backend=args.cache_backend,
                      prefill_chunk=args.prefill_chunk,
-                     prefill_budget=args.prefill_budget),
+                     prefill_budget=args.prefill_budget,
+                     paged_pool_blocks=args.pool_blocks,
+                     preemption_mode=args.preemption_mode,
+                     preemption_policy=args.preemption_policy,
+                     prefix_cache=args.prefix_cache),
         make_policy(args.policy), mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
@@ -66,11 +101,24 @@ def main() -> None:
           f"E={stats['energy_j']:.1f} J, "
           f"avg imbalance {stats['avg_imbalance']:.1f}")
     if args.cache_backend == "paged":
-        dense = eng.backend.pool_bytes()  # slot layout keeps this resident
+        # what the contiguous slot layout would pin (every slot at
+        # max_seq_len) — NOT the pool size, which --pool-blocks may have
+        # shrunk below it
+        per_block = eng.backend.pool_bytes() // eng.backend.n_blocks
+        dense = per_block * eng.backend.N * eng.backend.max_blocks
         print(f"[serve] paged KV: peak resident "
               f"{eng.kv_peak_bytes / 1e6:.2f} MB "
               f"({eng.kv_peak_bytes / max(dense, 1):.1%} of the "
               f"{dense / 1e6:.2f} MB the slot layout pins)")
+        if stats["preemptions"]:
+            print(f"[serve] memory pressure: {stats['preemptions']} "
+                  f"preemptions ({args.preemption_mode}), "
+                  f"{stats['tokens_swapped']} KV tokens swapped, "
+                  f"{stats['tokens_recomputed']} recomputed")
+        if args.prefix_cache:
+            print(f"[serve] prefix cache: {stats['prefix_hits']}/"
+                  f"{stats['prefix_queries']} block hits "
+                  f"({stats['prefix_hit_rate']:.1%})")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Serving runtime: the multi-worker decode engine with router-integrated
 load balancing (the paper's system, runnable), pluggable cache backends
-(contiguous slots / vLLM-style paged KV), the admission scheduler with
-chunked prefill, and the device-side routed serving loop."""
+(contiguous slots / vLLM-style paged KV with prefix caching), the
+admission scheduler with chunked prefill and preemption under memory
+pressure, and the device-side routed serving loop."""
 from .engine import EngineConfig, ServeRequest, ServingEngine  # noqa: F401
 from .cache_backend import (  # noqa: F401
     CacheBackend,
@@ -10,6 +11,15 @@ from .cache_backend import (  # noqa: F401
     make_cache_backend,
 )
 from .device_loop import init_loop_state, make_device_serving_loop  # noqa: F401
-from .paged_cache import BlockAllocator, PagedKVCache  # noqa: F401
+from .paged_cache import BlockAllocator, PagedKVCache, PrefixIndex  # noqa: F401
+from .preemption import (  # noqa: F401
+    FIFOPreemption,
+    LargestPreemption,
+    LIFOPreemption,
+    PreemptContext,
+    PreemptedState,
+    PreemptionPolicy,
+    make_preemption_policy,
+)
 from .scheduler import PrefillJob, Scheduler  # noqa: F401
 from .slot_table import SlotTable, cap_assignment, slot_worker_map  # noqa: F401

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import abc
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +60,8 @@ from ..models import (
     paged_decode_fn,
     supports_paged_stack,
 )
-from .paged_cache import PagedKVCache
+from .paged_cache import PagedKVCache, PrefixIndex
+from .preemption import PreemptedState, swap_in_blocks, swap_out_blocks
 
 __all__ = ["CacheBackend", "SlotCacheBackend", "PagedCacheBackend",
            "make_cache_backend"]
@@ -158,11 +160,13 @@ class CacheBackend(abc.ABC):
     name: str = "base"
 
     @abc.abstractmethod
-    def write_prefill(self, mini_cache, src: np.ndarray,
-                      dst: np.ndarray) -> None:
+    def write_prefill(self, mini_cache, src: np.ndarray, dst: np.ndarray,
+                      tokens: Optional[np.ndarray] = None) -> None:
         """Install prefill output: copy rows ``src`` of ``mini_cache``
         (a ``prefill_fn`` cache over the admitted batch) into slots
-        ``dst``."""
+        ``dst``.  ``tokens`` (rows aligned with the mini cache) carries
+        the prompt token ids so content-addressed backends can dedup
+        shared prefixes; layout-only backends ignore it."""
 
     @abc.abstractmethod
     def prefill_chunk(self, toks: np.ndarray, offs: np.ndarray,
@@ -215,10 +219,11 @@ class SlotCacheBackend(CacheBackend):
         self._bytes = int(sum(
             a.nbytes for a in jax.tree.leaves(self.cache)))
 
-    def write_prefill(self, mini_cache, src, dst) -> None:
+    def write_prefill(self, mini_cache, src, dst, tokens=None) -> None:
         """ONE gather + scatter per cache leaf for the whole admitted
         batch.  Cache leaves are stacked (layers, batch, ...): batch is
-        dim 1, except 'lengths' (batch is dim 0)."""
+        dim 1, except 'lengths' (batch is dim 0).  ``tokens`` is unused
+        (the contiguous layout is not content-addressed)."""
         src = jnp.asarray(src, jnp.int32)
         dst = jnp.asarray(dst, jnp.int32)
 
@@ -284,10 +289,20 @@ class PagedCacheBackend(CacheBackend):
     ``EngineConfig`` knobs: ``paged_block_size`` (tokens per block;
     must divide ``max_seq_len`` so the gathered contiguous view matches
     the slot layout bit-for-bit), ``paged_pool_blocks`` (0 = capacity for
-    every slot at ``max_seq_len``; smaller pools oversubscribe memory and
-    raise ``MemoryError`` on exhaustion — preemption is future work), and
-    ``paged_attn_impl`` (``"gather"`` CPU oracle / ``"ref"`` standalone
-    jnp oracle / ``"pallas"`` TPU kernel)."""
+    every slot at ``max_seq_len``; smaller pools oversubscribe memory —
+    the engine preempts victims on pressure instead of crashing, see
+    :mod:`repro.serving.preemption`), ``paged_attn_impl`` (``"gather"``
+    CPU oracle / ``"ref"`` standalone jnp oracle / ``"pallas"`` TPU
+    kernel), and ``prefix_cache`` (share identical prompt-prefix blocks
+    across requests via :class:`~repro.serving.paged_cache.PrefixIndex`,
+    copy-on-write on the first divergent append).
+
+    The preemption surface the engine drives: the ``*_demand`` methods
+    report how many blocks an operation is about to allocate (so the
+    engine can free capacity *first* and the allocator never raises
+    mid-step), and ``swap_out`` / ``swap_in`` / ``discard`` move a
+    victim's blocks to host staging and back (or drop them for
+    recompute-on-resume)."""
 
     name = "paged"
 
@@ -314,6 +329,10 @@ class PagedCacheBackend(CacheBackend):
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
             max_requests=self.N, max_blocks_per_req=self.max_blocks,
             dtype=jnp.dtype(cfg.dtype))
+        self.prefix: Optional[PrefixIndex] = None
+        if getattr(ec, "prefix_cache", False):
+            self.prefix = PrefixIndex()
+            self.kv.prefix = self.prefix
         self._decode_jit = _jitted_paged_decode(cfg, mesh, bs,
                                                 ec.paged_attn_impl)
         self._chunk_jit = _jitted_paged_chunk(cfg, mesh, bs)
@@ -322,6 +341,14 @@ class PagedCacheBackend(CacheBackend):
     @property
     def n_blocks(self) -> int:
         return self.kv.allocator.n_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return self.kv.allocator.n_free
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks a request with ``n_tokens`` of KV occupies (>= 1)."""
+        return -(-max(int(n_tokens), 1) // self.block_size)
 
     def pool_bytes(self) -> int:
         return int(self.kv.k_pool.nbytes + self.kv.v_pool.nbytes)
@@ -333,10 +360,34 @@ class PagedCacheBackend(CacheBackend):
         return out
 
     # -- protocol -------------------------------------------------------
-    def write_prefill(self, mini_cache, src, dst) -> None:
+    def _shared_prefix(self, toks_row: np.ndarray) -> tuple[list, list]:
+        """Longest leading run of prefix-cache hits for a prompt: returns
+        (keys, shared_blocks) where ``keys`` covers every block of the
+        prompt (chained content-hash triples) and ``shared_blocks`` is
+        the hit run (possibly empty).  Only content-verified,
+        still-allocated blocks count — the index is evicted eagerly and
+        lookups compare the stored token span, so a hit is always
+        content-valid."""
+        keys = self.prefix.keys_for(toks_row, self.block_size)
+        shared = []
+        for key, parent, span in keys:
+            blk = self.prefix.lookup(key, parent, span)
+            if blk is None or self.kv.allocator.ref_count(blk) <= 0:
+                break
+            shared.append(blk)
+        self.prefix.queries += len(keys)
+        self.prefix.hits += len(shared)
+        return keys, shared
+
+    def write_prefill(self, mini_cache, src, dst, tokens=None) -> None:
         """Scatter the admitted batch's prefill KV into freshly allocated
         blocks: ONE gather + scatter per pool (k and v) for the whole
-        batch, indexed block-wise."""
+        batch, indexed block-wise.  With the prefix cache on (and
+        ``tokens`` provided), each request's leading blocks whose chained
+        token-content hash is already indexed are reused copy-free via
+        ``add_ref`` — their writes are skipped (the resident KV for an
+        identical prefix is identical) — and the request's own blocks are
+        registered for later arrivals."""
         src = np.asarray(src)
         dst = np.asarray(dst)
         lens = np.asarray(mini_cache["lengths"])
@@ -344,11 +395,19 @@ class PagedCacheBackend(CacheBackend):
         rows, blkpos, blocks = [], [], []
         for i, s in zip(src, dst):
             s = int(s)
-            self.kv.admit(s, int(lens[i]))
+            L = int(lens[i])
+            keys: list = []
+            shared: list = []
+            if self.prefix is not None and tokens is not None and L > 0:
+                keys, shared = self._shared_prefix(tokens[int(i), :L])
+            self.kv.admit(s, L, shared=tuple(shared))
             bl = self.kv.req_blocks[s]
-            rows.extend([int(i)] * len(bl))
-            blkpos.extend(range(len(bl)))
-            blocks.extend(bl)
+            for j, (key, parent, span) in enumerate(keys):
+                self.prefix.register(key, parent, span, bl[j])
+            skip = len(shared)
+            rows.extend([int(i)] * (len(bl) - skip))
+            blkpos.extend(range(skip, len(bl)))
+            blocks.extend(bl[skip:])
         k = mini_cache["blocks"]["k"]          # (layers, nb, S, Hkv, hd)
         v = mini_cache["blocks"]["v"]
         S = k.shape[2]
@@ -360,6 +419,8 @@ class PagedCacheBackend(CacheBackend):
         nblk = (S + pad) // bs
         kb = k.reshape(k.shape[0], k.shape[1], nblk, bs, *k.shape[3:])
         vb = v.reshape(*kb.shape)
+        if not blocks:       # every block shared: nothing to write
+            return
         rows = np.asarray(rows, np.int32)
         blkpos = np.asarray(blkpos, np.int32)
         blocks = np.asarray(blocks, np.int32)
@@ -415,6 +476,54 @@ class PagedCacheBackend(CacheBackend):
             jnp.asarray(off), jnp.asarray(toks))
         self.kv.k_pool, self.kv.v_pool = kp, vp
         return np.asarray(nxt)[:n]
+
+    # -- memory pressure (engine-driven preemption) ---------------------
+    def decode_block_demand(self, active_idx: np.ndarray) -> int:
+        """Blocks the next decode step over ``active_idx`` will allocate
+        (boundary crossings + copy-on-write of shared tail blocks)."""
+        return self.kv.append_demand(active_idx)
+
+    def chunk_block_demand(self, plan) -> int:
+        """Blocks a chunk plan [(slot, off, n), ...] will allocate."""
+        need = 0
+        for slot, off, n in plan:
+            have = len(self.kv.req_blocks.get(int(slot), []))
+            need += max(self.blocks_for(off + n) - have, 0)
+        return need
+
+    def swap_out(self, slot: int) -> PreemptedState:
+        """Move a victim's KV blocks to host staging (tiled copy) and
+        return them to the pool; the returned state restores the blocks
+        bit-for-bit via :meth:`swap_in`."""
+        slot = int(slot)
+        blocks = self.kv.req_blocks.get(slot, [])
+        state = PreemptedState(
+            mode="swap", length=int(self.kv.lengths[slot]),
+            k_host=swap_out_blocks(self.kv.k_pool, blocks),
+            v_host=swap_out_blocks(self.kv.v_pool, blocks))
+        self.kv.release(slot)
+        return state
+
+    def swap_in(self, slot: int, state: PreemptedState) -> None:
+        """Restore a swapped victim into fresh blocks on ``slot``.  The
+        blocks are private (a shared prefix is not re-deduped on resume);
+        admission block-gating guarantees the allocation fits."""
+        slot = int(slot)
+        n = state.n_blocks
+        blocks = self.kv.allocator.alloc(n)
+        self.kv.block_tables[slot, :] = -1
+        self.kv.block_tables[slot, :n] = blocks
+        self.kv.req_blocks[slot] = blocks
+        self.kv.lengths[slot] = state.length
+        if n:
+            self.kv.k_pool = swap_in_blocks(self.kv.k_pool, blocks,
+                                            state.k_host)
+            self.kv.v_pool = swap_in_blocks(self.kv.v_pool, blocks,
+                                            state.v_host)
+
+    def discard(self, slot: int) -> None:
+        """Drop a victim's KV for recompute-on-resume."""
+        self.kv.release(int(slot))
 
     def release(self, slots) -> None:
         for s in np.asarray(slots):

@@ -14,6 +14,15 @@ bounded waiting buffer, and the BF-IO assignment runs as traced code each
 step.  Workload dynamics follow the paper's model (unit KV drift,
 known-at-admission prefill sizes, completion at a fixed per-request decode
 length).
+
+``kv_pool > 0`` adds the host engine's memory-pressure model to the
+traced program: per-slot resident KV is approximated by the absorbed load,
+and whenever the active total exceeds the pool, the most recently admitted
+slot is preempted (LIFO, recompute model — its absorbed work returns to
+the wait buffer, its decode progress is preserved) until the total fits.
+``tot_preempts`` counts the evictions, mirroring the host engine's
+``preemptions`` stat so policies can be compared on preemption churn at
+device speed.
 """
 from __future__ import annotations
 
@@ -38,11 +47,14 @@ class LoopState(NamedTuple):
     tot_imbalance: jnp.ndarray  # () f32
     tot_steps: jnp.ndarray      # () i32
     slot_prefill_left: jnp.ndarray  # (G*B,) f32 prompt work not yet done
+    slot_admit_step: jnp.ndarray    # (G*B,) i32 admission step (LIFO key)
+    tot_preempts: jnp.ndarray   # () i32 memory-pressure evictions
 
 
 def make_device_serving_loop(G: int, B: int, wait_cap: int,
                              swap_iters: int = 4,
-                             prefill_budget: float = 0.0):
+                             prefill_budget: float = 0.0,
+                             kv_pool: float = 0.0):
     """Returns jitted ``run(state, n_steps) -> state`` executing the
     admit/decode/complete loop fully on device.
 
@@ -51,12 +63,18 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
     and absorb at most ``prefill_budget`` prompt tokens per step
     (greedily in flat slot order); a slot decodes only once its prefill
     drains.  ``0`` keeps the seed semantics — the whole prompt lands in
-    the admission step.  The flag is a python constant, so the ``0``
-    path traces to exactly the original program.
+    the admission step.
+
+    ``kv_pool > 0`` models the paged backend's finite block pool (see the
+    module doc): LIFO preemption with recompute-on-resume whenever the
+    active resident KV exceeds the pool.  Both flags are python
+    constants, so the all-zero path traces to exactly the original
+    program.
     """
     S = G * B
     slot_worker = jnp.asarray(slot_worker_map(G, B))
     chunked = prefill_budget > 0
+    pooled = kv_pool > 0
 
     def step(state: LoopState, _):
         # --- current loads ------------------------------------------------
@@ -78,11 +96,11 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
         # place admitted candidates into free slots of their worker:
         # slot rank within worker == assignment rank within worker
         def place(carry, i):
-            slot_active, slot_load, slot_rem, wp, wr, pl = carry
+            slot_active, slot_load, slot_rem, wp, wr, pl, adm = carry
             g = assign[i]
 
             def do_place(args):
-                slot_active, slot_load, slot_rem, wp, wr, pl = args
+                slot_active, slot_load, slot_rem, wp, wr, pl, adm = args
                 free = (~slot_active) & (slot_worker == g)
                 idx = jnp.argmax(free)          # first free slot of g
                 ok = free[idx]
@@ -95,22 +113,26 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
                     jnp.where(ok, load0, slot_load[idx]))
                 if chunked:
                     pl = pl.at[idx].set(jnp.where(ok, wp[i], pl[idx]))
+                if pooled:
+                    adm = adm.at[idx].set(
+                        jnp.where(ok, state.tot_steps, adm[idx]))
                 slot_rem = slot_rem.at[idx].set(
                     jnp.where(ok, wr[i], slot_rem[idx]))
                 wp = wp.at[i].set(jnp.where(ok, 0.0, wp[i]))
                 wr = wr.at[i].set(jnp.where(ok, 0, wr[i]))
-                return slot_active, slot_load, slot_rem, wp, wr, pl
+                return slot_active, slot_load, slot_rem, wp, wr, pl, adm
 
             return jax.lax.cond(g >= 0, do_place, lambda a: a,
                                 (slot_active, slot_load, slot_rem, wp,
-                                 wr, pl)), None
+                                 wr, pl, adm)), None
 
-        (slot_active, slot_load, slot_rem, wp, wr, pl), _ = jax.lax.scan(
-            place,
-            (state.slot_active, state.slot_load, state.slot_remaining,
-             state.wait_prefill, state.wait_remaining,
-             state.slot_prefill_left),
-            jnp.arange(wait_cap))
+        (slot_active, slot_load, slot_rem, wp, wr, pl, adm), _ = \
+            jax.lax.scan(
+                place,
+                (state.slot_active, state.slot_load, state.slot_remaining,
+                 state.wait_prefill, state.wait_remaining,
+                 state.slot_prefill_left, state.slot_admit_step),
+                jnp.arange(wait_cap))
 
         # --- chunked prefill: drain at most prefill_budget tokens ----------
         if chunked:
@@ -138,9 +160,38 @@ def make_device_serving_loop(G: int, B: int, wait_cap: int,
                                         slot_load + 1.0, slot_load),
                               0.0)
 
+        # --- memory pressure: LIFO preempt until resident KV fits ----------
+        n_pre = state.tot_preempts
+        if pooled:
+            def over(c):
+                sa, sl, srem, wp2, wr2, pl2, npre = c
+                # resident KV = absorbed tokens only; queued prefill
+                # (pl2) has not been written anywhere yet
+                total = jnp.sum(jnp.where(sa, sl, 0.0))
+                return (total > kv_pool) & jnp.any(sa) & jnp.any(wp2 <= 0)
+
+            def evict(c):
+                sa, sl, srem, wp2, wr2, pl2, npre = c
+                victim = jnp.argmax(jnp.where(sa, adm, -1))
+                widx = jnp.argmax(wp2 <= 0)     # first free wait entry
+                # recompute model: every absorbed token must be redone,
+                # so the whole load (plus unfinished prefill) requeues
+                back = sl[victim] + pl2[victim]
+                wp2 = wp2.at[widx].set(jnp.maximum(back, 1.0))
+                wr2 = wr2.at[widx].set(jnp.maximum(srem[victim], 1))
+                sa = sa.at[victim].set(False)
+                sl = sl.at[victim].set(0.0)
+                pl2 = pl2.at[victim].set(0.0)
+                return sa, sl, srem, wp2, wr2, pl2, npre + 1
+
+            (slot_active, slot_load, slot_rem, wp, wr, pl, n_pre) = \
+                jax.lax.while_loop(
+                    over, evict,
+                    (slot_active, slot_load, slot_rem, wp, wr, pl, n_pre))
+
         return LoopState(slot_active, slot_load, slot_rem, wp, wr,
                          state.tot_imbalance + imb,
-                         state.tot_steps + 1, pl), None
+                         state.tot_steps + 1, pl, adm, n_pre), None
 
     @functools.partial(jax.jit, static_argnames=("n_steps",))
     def run(state: LoopState, n_steps: int) -> LoopState:
@@ -167,4 +218,6 @@ def init_loop_state(G: int, B: int, wait_prefill, wait_remaining,
         tot_imbalance=jnp.zeros((), jnp.float32),
         tot_steps=jnp.zeros((), jnp.int32),
         slot_prefill_left=jnp.zeros((S,), jnp.float32),
+        slot_admit_step=jnp.full((S,), -1, jnp.int32),
+        tot_preempts=jnp.zeros((), jnp.int32),
     )

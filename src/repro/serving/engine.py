@@ -36,6 +36,18 @@ problem is *identical* in both cases — that is the point of the paper.
   writes, kept as a live-measured regression oracle
   (``benchmarks/balancer_bench.py`` sections ``engine`` and
   ``engine_paged`` time the variants and assert stats parity).
+
+On the paged backend the engine also drives the memory-pressure
+subsystem (:mod:`repro.serving.preemption`): admission is gated on free
+pool blocks, every growth path (decode block crossings, copy-on-write,
+prefill chunks) pre-declares its block demand and victims are preempted
+— swapped host-side or dropped for recompute-on-resume — until it fits
+(``EngineConfig.preemption_mode`` / ``preemption_policy``), and
+``EngineConfig.prefix_cache`` shares identical prompt-prefix blocks
+across concurrent requests.  ``benchmarks/balancer_bench.py`` section
+``engine_preempt`` and ``tests/test_preemption.py`` gate the invariants
+(completion under a half-sized pool, bit-identical swap generations,
+refcount drain, hit-rate with unchanged outputs).
 """
 from __future__ import annotations
 
@@ -54,6 +66,11 @@ from ..core.policies import Policy, SchedulerContext
 from ..core.workload import DriftModel, drift_for_family
 from ..models import decode_fn, prefill_fn, supports_paged_stack
 from .cache_backend import make_cache_backend
+from .preemption import (
+    PreemptContext,
+    PreemptedState,
+    make_preemption_policy,
+)
 from .scheduler import Scheduler
 from .slot_table import SlotTable
 
@@ -73,6 +90,10 @@ class ServeRequest:
     t_submit: float = 0.0
     t_first_token: float = float("nan")
     t_finish: float = float("nan")
+    # set while the request sits preempted in the wait queue (swap-staged
+    # KV or recompute bookkeeping, see serving/preemption.py); None once
+    # (re-)admitted
+    preempted: Optional[PreemptedState] = None
 
     @property
     def done(self) -> bool:
@@ -101,6 +122,21 @@ class EngineConfig:
     paged_block_size: int = 16      # tokens per KV block (divides max_seq)
     paged_pool_blocks: int = 0      # 0 -> capacity for all slots at max_seq
     paged_attn_impl: str = "gather"  # "gather" | "ref" | "pallas"
+    # memory pressure (paged backend): when the block pool cannot serve a
+    # growth/admission request, a victim is preempted instead of raising
+    # MemoryError.  "swap" stages the victim's blocks host-side and
+    # restores them bit-for-bit on resume; "recompute" drops them and
+    # re-prefills prompt + generated tokens through the (chunked) prefill
+    # path.  The victim re-enters the wait queue at the front with its
+    # generated tokens preserved.  preemption_policy picks the victim
+    # ("lifo" default / "fifo" / "largest", see serving/preemption.py).
+    preemption_mode: str = "swap"   # "swap" | "recompute"
+    preemption_policy: str = "lifo"
+    # prefix caching (paged backend): share identical prompt-prefix KV
+    # blocks across requests via a content-hash index, copy-on-write on
+    # the first divergent append.  Synchronous-prefill admissions only
+    # (chunked admissions allocate lazily and skip the index).
+    prefix_cache: bool = False
 
 
 # ----------------------------------------------------------------------
@@ -159,6 +195,14 @@ class ServingEngine:
                 "without a sliding window whose prompt embeds tokens "
                 f"only (dense/moe); got family={cfg.family!r} "
                 f"sliding_window={cfg.sliding_window}")
+        if ec.preemption_mode not in ("swap", "recompute"):
+            raise ValueError(
+                f"preemption_mode must be 'swap' or 'recompute', got "
+                f"{ec.preemption_mode!r}")
+        if ec.prefix_cache and ec.cache_backend != "paged":
+            raise ValueError(
+                "prefix_cache=True needs cache_backend='paged' (the "
+                "contiguous slot layout has no shareable blocks)")
         self.cfg = cfg
         self.params = params
         self.ec = ec
@@ -171,10 +215,11 @@ class ServingEngine:
         self.N = N
         self.backend = make_cache_backend(ec.cache_backend, cfg, params,
                                           ec, mesh)
-        self.scheduler = Scheduler(policy,
-                                   prefill_chunk=min(chunk,
-                                                     ec.max_seq_len),
-                                   prefill_budget=ec.prefill_budget)
+        self._paged = ec.cache_backend == "paged"
+        self.scheduler = Scheduler(
+            policy, prefill_chunk=min(chunk, ec.max_seq_len),
+            prefill_budget=ec.prefill_budget,
+            preemption=make_preemption_policy(ec.preemption_policy))
         self.table = SlotTable(G, B)
         self.slot_req: list[Optional[ServeRequest]] = [None] * N
         self.slot_tokens = np.zeros(N, dtype=np.int32)   # next input token
@@ -184,12 +229,19 @@ class ServingEngine:
         self.slot_age = np.zeros(N, dtype=np.int64)      # len(generated)
         self.slot_max_new = np.zeros(N, dtype=np.int64)
         self.slot_eos = np.full(N, -1, dtype=np.int64)
+        # monotonic admission order per slot (LIFO victim selection)
+        self.slot_admit_seq = np.zeros(N, dtype=np.int64)
+        self._admit_seq = 0
         self.t_now = 0.0
         self.steps = 0
         self.energy_j = 0.0
         self.imbalance_sum = 0.0
         self.tokens_out = 0
         self.kv_peak_bytes = 0
+        # memory-pressure accounting (paged backend)
+        self.preemptions = 0
+        self.tokens_swapped = 0      # KV tokens staged host-side
+        self.tokens_recomputed = 0   # KV tokens dropped for re-prefill
         self.rng = np.random.default_rng(0)
 
         self._decode = _jitted_decode(cfg, mesh)
@@ -212,6 +264,20 @@ class ServingEngine:
         return self.scheduler.wait
 
     def submit(self, req: ServeRequest) -> None:
+        """Queue a request.  On the paged backend, a prompt whose KV can
+        never fit the block pool — even with every other request
+        preempted — is rejected here instead of surfacing as a
+        ``MemoryError`` (or an admission livelock) mid-prefill."""
+        if self._paged:
+            L = min(len(req.tokens), self.ec.max_seq_len)
+            need = self.backend.blocks_for(L)
+            if need > self.backend.n_blocks:
+                raise ValueError(
+                    f"request {req.rid}: prompt of {L} tokens needs "
+                    f"{need} KV blocks but the pool holds only "
+                    f"{self.backend.n_blocks} "
+                    f"(block_size={self.backend.block_size}) — it can "
+                    "never be admitted")
         req.t_submit = self.t_now
         self.scheduler.submit(req)
 
@@ -237,6 +303,40 @@ class ServingEngine:
         return counts
 
     # ------------------------------------------------------------------
+    def _admit_tokens(self, r: "ServeRequest") -> np.ndarray:
+        """Token sequence a (re-)admission must prefill: the truncated
+        prompt, or — for a recompute-on-resume request — the prompt plus
+        every generated token except the last (which is the pending
+        decode input, preserved in ``r.preempted.next_token``)."""
+        prompt = np.asarray(r.tokens, dtype=np.int64)[:self.ec.max_seq_len]
+        if r.preempted is not None:
+            toks = np.concatenate(
+                [prompt, np.asarray(r.generated[:-1], dtype=np.int64)])
+            return toks[:self.ec.max_seq_len].astype(np.int32)
+        return prompt.astype(np.int32)
+
+    def _admit_len(self, r: "ServeRequest") -> int:
+        """len(:meth:`_admit_tokens`) without materializing the array —
+        called per waiting request per admission step (block gating)."""
+        L = min(len(r.tokens), self.ec.max_seq_len)
+        if r.preempted is not None:
+            L = min(L + max(len(r.generated) - 1, 0),
+                    self.ec.max_seq_len)
+        return L
+
+    def _req_cost(self, r: "ServeRequest") -> float:
+        """Prefill-size proxy a routing policy sees for a waiting
+        request (resumed victims bring their resident KV length)."""
+        if r.preempted is not None:
+            return float(r.preempted.length)
+        return float(len(r.tokens))
+
+    def _blocks_needed(self, r: "ServeRequest") -> int:
+        """KV blocks admission must be able to allocate for ``r``."""
+        if r.preempted is not None and r.preempted.mode == "swap":
+            return r.preempted.n_blocks
+        return self.backend.blocks_for(self._admit_len(r))
+
     def _admit(self) -> None:
         """Router step: assign waiting requests to free slots."""
         if not self.wait:
@@ -271,7 +371,7 @@ class ServingEngine:
             loads=loads,
             counts=counts,
             caps=caps.astype(np.int64),
-            wait_prefill=np.array([len(r.tokens) for r in self.wait],
+            wait_prefill=np.array([self._req_cost(r) for r in self.wait],
                                   dtype=np.float64),
             active_worker=active_worker,
             active_w=active_w,
@@ -281,25 +381,46 @@ class ServingEngine:
             rng=self.rng,
             active_prefill_remaining=prefill_remaining,
         )
-        to_admit = self.scheduler.admit(ctx, caps)
+        gate = {}
+        if self._paged:
+            # admit only what the pool can hold after reserving this
+            # step's decode growth — admission itself never preempts, so
+            # a wave larger than the free pool degrades to waiting
+            budget = (self.backend.free_blocks
+                      - self.backend.decode_block_demand(
+                          self.table.decode_indices()))
+            gate = dict(block_budget=max(int(budget), 0),
+                        blocks_of=self._blocks_needed)
+        to_admit = self.scheduler.admit(ctx, caps, **gate)
         if not to_admit:
+            return
+        resumed = [(r, g) for r, g in to_admit
+                   if r.preempted is not None
+                   and r.preempted.mode == "swap"]
+        fresh = [(r, g) for r, g in to_admit
+                 if r.preempted is None or r.preempted.mode != "swap"]
+        if resumed:
+            self._resume_swapped(resumed)
+        if not fresh:
             return
         if self.scheduler.chunked:
             # empty prompts have no chunk work to schedule; the
             # synchronous path already handles them (prefill over an
             # all-padding row), so route them there
-            empty = [(r, g) for r, g in to_admit if len(r.tokens) == 0]
-            chunked = [(r, g) for r, g in to_admit if len(r.tokens) > 0]
+            empty = [(r, g) for r, g in fresh if self._admit_len(r) == 0]
+            chunked = [(r, g) for r, g in fresh if self._admit_len(r) > 0]
             if chunked:
                 self._admit_chunked(chunked)
             if empty:
                 self._prefill_batch(empty)
         else:
-            self._prefill_batch(to_admit)
+            self._prefill_batch(fresh)
 
     def _admit_chunked(self, items: list[tuple["ServeRequest", int]]) -> None:
         """Chunked admission: claim slots and register prefill jobs; no
-        model work happens here — chunks run under the per-step budget."""
+        model work happens here — chunks run under the per-step budget.
+        Recompute-on-resume requests re-prefill prompt + generated tokens
+        with their pending decode token carried on the job."""
         workers = np.array([g for _, g in items], dtype=np.int64)
         slots = self.table.allocate(workers)
         for i, (r, g) in enumerate(items):
@@ -310,15 +431,165 @@ class ServingEngine:
             self.slot_age[slot] = 0
             self.slot_max_new[slot] = r.max_new_tokens
             self.slot_eos[slot] = r.eos_id
-            toks = np.asarray(r.tokens[:self.ec.max_seq_len],
-                              dtype=np.int32)
+            self.slot_admit_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            toks = self._admit_tokens(r)
+            resume_token = resume_length = None
+            if r.preempted is not None:
+                resume_token = int(r.preempted.next_token)
+                resume_length = int(r.preempted.length)
+                r.preempted = None
             self.table.prefill_left[slot] = len(toks)
-            self.scheduler.register_job(slot, r, toks)
+            self.scheduler.register_job(slot, r, toks,
+                                        resume_token=resume_token,
+                                        resume_length=resume_length)
+
+    def _resume_swapped(self, items: list[tuple["ServeRequest", int]]) -> None:
+        """Re-admit swap-preempted requests: claim a slot, restore the
+        host-staged KV blocks bit-for-bit, and continue exactly where the
+        victim stopped — decoding from its pending token, or its chunked
+        prefill job at the preserved offset.  No model work runs here."""
+        workers = np.array([g for _, g in items], dtype=np.int64)
+        slots = self.table.allocate(workers)
+        for i, (r, g) in enumerate(items):
+            slot = int(slots[i])
+            st = r.preempted
+            self.backend.swap_in(slot, st)
+            r.worker, r.slot = g, slot
+            self.slot_req[slot] = r
+            self.slot_max_new[slot] = r.max_new_tokens
+            self.slot_eos[slot] = r.eos_id
+            self.slot_admit_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            if st.prefill_done >= 0:      # victim was mid-prefill
+                self.slot_load[slot] = float(st.prefill_done)
+                self.slot_age[slot] = 0
+                self.table.prefill_left[slot] = \
+                    len(st.prefill_tokens) - st.prefill_done
+                self.scheduler.register_job(
+                    slot, r, st.prefill_tokens, done=st.prefill_done,
+                    resume_token=st.resume_token,
+                    resume_length=st.resume_length)
+            else:                         # victim was decoding
+                self.slot_load[slot] = float(st.length)
+                self.slot_tokens[slot] = int(st.next_token)
+                self.slot_age[slot] = len(r.generated)
+            r.preempted = None
+
+    # -- memory pressure ------------------------------------------------
+    def _preempt_one(self) -> bool:
+        """Free pool capacity by preempting one victim (chosen by the
+        scheduler's preemption policy); False when no active request is
+        left to preempt."""
+        cand = self.table.active_indices()
+        if cand.size == 0:
+            return False
+        kv = self.backend.kv
+        ctx = PreemptContext(
+            slots=cand,
+            admit_seq=self.slot_admit_seq[cand],
+            kv_tokens=kv.lengths[cand].astype(np.int64),
+            blocks_held=np.array(
+                [len(kv.req_blocks.get(int(s), [])) for s in cand],
+                dtype=np.int64),
+            prefilling=self.table.prefill_left[cand] > 0)
+        victim = self.scheduler.select_victim(ctx)
+        if victim is None:
+            return False
+        self._preempt_slot(int(victim))
+        return True
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict the request on ``slot``: swap its KV host-side or drop
+        it for recompute, preserve the generated tokens, and requeue the
+        request at the front of the wait queue."""
+        r = self.slot_req[slot]
+        job = self.scheduler.drop_job(slot)
+        L = int(self.backend.kv.lengths[slot])
+        if self.ec.preemption_mode == "swap":
+            state = self.backend.swap_out(slot)
+            self.tokens_swapped += L
+            if job is not None:           # mid-prefill: resume the job
+                state.prefill_done = job.done
+                state.prefill_tokens = job.tokens
+                state.resume_token = job.resume_token
+                state.resume_length = job.resume_length
+            else:
+                state.next_token = int(self.slot_tokens[slot])
+            r.preempted = state
+        else:
+            self.backend.discard(slot)
+            self.tokens_recomputed += job.done if job is not None else L
+            if job is not None and job.resume_token is None:
+                r.preempted = None        # plain prompt: restart prefill
+            elif job is not None:         # re-preempted mid-rebuild
+                r.preempted = PreemptedState(
+                    mode="recompute",
+                    length=job.resume_length or len(job.tokens),
+                    next_token=int(job.resume_token))
+            else:
+                r.preempted = PreemptedState(
+                    mode="recompute", length=L,
+                    next_token=int(self.slot_tokens[slot]))
+        self.slot_req[slot] = None
+        self.table.release(np.asarray([slot]))
+        self.scheduler.requeue(r)
+        self.preemptions += 1
+
+    def _ensure_decode_capacity(self) -> None:
+        """Preempt until the pool can serve this step's decode growth
+        (boundary crossings + copy-on-write blocks).  Preempting shrinks
+        the decode set, so demand is recomputed after every victim.
+
+        A slot already holding the *entire* pool that still needs to
+        grow can never be served — preempting it would only requeue it
+        into an identical dead end (admit, grow back, self-preempt,
+        repeat until ``max_steps``), so that case fails fast with the
+        seed's ``MemoryError`` instead of thrashing."""
+        kv = self.backend.kv
+        while True:
+            decode_idx = self.table.decode_indices()
+            need = self.backend.decode_block_demand(decode_idx)
+            if need <= self.backend.free_blocks:
+                return
+            for s in decode_idx:
+                s = int(s)
+                held = len(kv.req_blocks.get(s, []))
+                if (held + 1 > self.backend.n_blocks
+                        and kv.append_demand(np.asarray([s])) > 0):
+                    r = self.slot_req[s]
+                    raise MemoryError(
+                        f"request {r.rid}: resident KV ({held} blocks) "
+                        f"plus one growth block exceeds the entire pool "
+                        f"({self.backend.n_blocks} blocks) — preemption "
+                        "cannot help; size the pool for at least one "
+                        "full request (prompt + max_new_tokens)")
+            if not self._preempt_one():
+                raise MemoryError(
+                    f"KV pool exhausted with no preemptable victim: "
+                    f"decode growth needs {need} blocks, "
+                    f"{self.backend.free_blocks} free of "
+                    f"{self.backend.n_blocks}")
 
     def _run_chunks(self) -> int:
         """Advance mid-prefill jobs by at most the step budget; returns
-        the number of prompt tokens processed this step."""
+        the number of prompt tokens processed this step.  On the paged
+        backend, capacity for the planned chunks is secured *first* by
+        preempting victims (a preempted victim may itself be a planned
+        job, so the plan is rebuilt after every preemption)."""
         plan = self.scheduler.plan_chunks()
+        if self._paged:
+            while True:
+                need = self.backend.chunk_block_demand(plan)
+                if need <= self.backend.free_blocks:
+                    break
+                if not self._preempt_one():
+                    raise MemoryError(
+                        f"KV pool exhausted with no preemptable victim: "
+                        f"prefill chunks need {need} blocks, "
+                        f"{self.backend.free_blocks} free of "
+                        f"{self.backend.n_blocks}")
+                plan = self.scheduler.plan_chunks()
         if not plan:
             return 0
         rows = len(plan)
@@ -336,20 +607,46 @@ class ServingEngine:
         total = 0
         for j, (slot, off, n) in enumerate(plan):
             total += n
+            job = self.scheduler.job(slot)
             finished = self.scheduler.advance(slot, n)
             done = off + n
             self.slot_load[slot] = float(done)
             self.table.prefill_left[slot] = 0 if finished else \
-                self.scheduler.job(slot).remaining
+                job.remaining
             if finished:
-                first = int(np.argmax(logits[j]))
                 r = self.slot_req[slot]
+                if job.resume_token is not None:
+                    # recompute-on-resume rebuild: the next decode input
+                    # was generated before the preemption — no fresh
+                    # first token is sampled
+                    self.slot_tokens[slot] = int(job.resume_token)
+                    self.slot_age[slot] = len(r.generated)
+                    if (job.resume_length is not None
+                            and job.resume_length > done):
+                        # the victim had decoded past max_seq_len on
+                        # frozen KV: keep its RoPE position counter
+                        # instead of restarting it at the cap
+                        self.backend.kv.lengths[slot] = job.resume_length
+                    continue
+                first = int(np.argmax(logits[j]))
                 self.slot_tokens[slot] = first
                 self.slot_age[slot] = 1
                 r.generated.append(first)
                 if np.isnan(r.t_first_token):
                     r.t_first_token = self.t_now
+                if (len(r.generated) >= r.max_new_tokens
+                        or first == r.eos_id):
+                    self._finish_at_prefill(slot, r)
         return total
+
+    def _finish_at_prefill(self, slot: int, r: "ServeRequest") -> None:
+        """A request whose budget (or eos) is already met by its first
+        token completes at prefill instead of burning a decode step on a
+        token past its budget."""
+        r.t_finish = self.t_now
+        self.slot_req[slot] = None
+        self.table.release(np.asarray([slot]))
+        self.backend.release(np.asarray([slot]))
 
     def _prefill_batch(self, items: list[tuple["ServeRequest", int]]) -> None:
         """Run prefill for admitted requests and write their cache slots.
@@ -359,8 +656,8 @@ class ServingEngine:
         """
         ec = self.ec
         vec = ec.engine_mode == "vec"
-        pad = min(max(ec.prefill_pad,
-                      max(len(r.tokens) for r, _ in items)),
+        seqs = [self._admit_tokens(r) for r, _ in items]
+        pad = min(max(ec.prefill_pad, max(len(t) for t in seqs)),
                   ec.max_seq_len)
         if vec:
             # round the pad up to a multiple of prefill_pad so the jitted
@@ -372,9 +669,9 @@ class ServingEngine:
         nbp = next(b for b in self._buckets if b >= nb) if vec else nb
         toks = np.zeros((nbp, pad), dtype=np.int32)
         lens = np.zeros(nbp, dtype=np.int32)
-        for i, (r, _) in enumerate(items):
-            L = min(len(r.tokens), pad)
-            toks[i, :L] = r.tokens[:L]
+        for i, t in enumerate(seqs):
+            L = min(len(t), pad)
+            toks[i, :L] = t[:L]
             lens[i] = L
         batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
         if self.cfg.family == "vlm":
@@ -409,24 +706,49 @@ class ServingEngine:
                 slots[i] = free[0]
                 self.slot_req[free[0]] = r
             self.table.active[slots] = True
+        done_slots = []
+        length_fix = []
         for i, (r, g) in enumerate(items):
             slot = int(slots[i])
             r.worker, r.slot = g, slot
             if vec:
                 self.slot_req[slot] = r  # ref set it during the free scan
-            self.slot_tokens[slot] = first[i]
             self.slot_load[slot] = float(lens[i])
-            self.slot_age[slot] = 1
             self.slot_max_new[slot] = r.max_new_tokens
             self.slot_eos[slot] = r.eos_id
-            r.generated.append(int(first[i]))
+            self.slot_admit_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            if r.preempted is not None:
+                # recompute-on-resume: KV rebuilt, the pending decode
+                # input was generated before the preemption
+                self.slot_tokens[slot] = int(r.preempted.next_token)
+                self.slot_age[slot] = len(r.generated)
+                if r.preempted.length > int(lens[i]):
+                    # victim had decoded past max_seq_len on frozen KV:
+                    # restore its RoPE position counter after the
+                    # backend re-admits the slot below
+                    length_fix.append((slot, int(r.preempted.length)))
+                r.preempted = None
+                continue
+            first_tok = int(first[i])
+            self.slot_tokens[slot] = first_tok
+            self.slot_age[slot] = 1
+            r.generated.append(first_tok)
             if np.isnan(r.t_first_token):
                 r.t_first_token = self.t_now
+            if (len(r.generated) >= r.max_new_tokens
+                    or first_tok == r.eos_id):
+                done_slots.append((slot, r))
         if ec.engine_mode == "vec":
-            self.backend.write_prefill(mini_cache, np.arange(nb), slots)
+            self.backend.write_prefill(mini_cache, np.arange(nb), slots,
+                                       tokens=toks)
         else:
             for i in range(nb):
                 self._copy_cache_slot(mini_cache, i, int(slots[i]))
+        for slot, length in length_fix:    # paged-only (resume path)
+            self.backend.kv.lengths[slot] = length
+        for slot, r in done_slots:
+            self._finish_at_prefill(slot, r)
 
     def _copy_cache_slot(self, mini_cache, src: int, dst: int) -> None:
         """Seed path: copy one request's cache entry (one dispatch per
@@ -457,6 +779,11 @@ class ServingEngine:
         self._admit()
         chunk_tokens = self._run_chunks() if self.scheduler.chunked else 0
         vec = self.ec.engine_mode == "vec"
+        if self._paged:
+            # secure this step's decode growth (block crossings + COW)
+            # before the barrier: preempt victims rather than letting the
+            # allocator raise mid-decode
+            self._ensure_decode_capacity()
         if vec:
             active_idx = self.table.active_indices()
             decode_idx = self.table.decode_indices() \
@@ -545,6 +872,9 @@ class ServingEngine:
         return self.stats()
 
     def stats(self) -> dict:
+        prefix = getattr(self.backend, "prefix", None)
+        hits = prefix.hits if prefix is not None else 0
+        queries = prefix.queries if prefix is not None else 0
         return {
             "steps": self.steps,
             "time_s": self.t_now,
@@ -553,4 +883,10 @@ class ServingEngine:
             "energy_j": self.energy_j,
             "avg_imbalance": self.imbalance_sum / max(self.steps, 1),
             "policy": self.policy.name,
+            "preemptions": self.preemptions,
+            "tokens_swapped": self.tokens_swapped,
+            "tokens_recomputed": self.tokens_recomputed,
+            "prefix_hits": hits,
+            "prefix_queries": queries,
+            "prefix_hit_rate": hits / queries if queries else 0.0,
         }

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["BlockAllocator", "PagedKVCache", "paged_decode_attention_ref"]
+__all__ = ["BlockAllocator", "PrefixIndex", "PagedKVCache",
+           "paged_decode_attention_ref"]
 
 
 class BlockAllocator:
@@ -67,16 +68,99 @@ class BlockAllocator:
             raise ValueError(f"add_ref on unallocated block {block}")
         self._refs[block] += 1
 
-    def free(self, blocks: list[int]) -> None:
+    def free(self, blocks: list[int]) -> list[int]:
+        """Drop one reference per block; returns the blocks whose last
+        reference dropped (i.e. the ones actually returned to the pool —
+        callers holding a prefix index must evict exactly those)."""
+        released = []
         for b in blocks:
             if b < 0 or b >= self.n_blocks:
-                raise ValueError(f"bad block id {b}")
+                raise ValueError(
+                    f"bad block id {b} (pool has {self.n_blocks} blocks)")
             if self._refs[b] <= 0:
                 raise ValueError(
-                    f"double free of block {b} (refcount already 0)")
+                    f"double free of block {b}: refcount is "
+                    f"{int(self._refs[b])}, block is not allocated")
             self._refs[b] -= 1
             if self._refs[b] == 0:
                 self._free.append(b)
+                released.append(b)
+        return released
+
+
+class PrefixIndex:
+    """Block-granular prefix cache: chained content hashes -> block ids.
+
+    A block's key hashes (parent_key, its token ids); equality of the
+    64-bit hash alone is NOT trusted — every entry stores its (parent,
+    tokens) pair and :meth:`lookup` verifies them, so a hash collision
+    degrades to a miss instead of silently serving another prompt's KV.
+    With the parent verified inductively, a hit proves the *entire*
+    token prefix up to and including that block is equal — and therefore
+    (causal attention) the KV content is too.  Full prompt blocks and
+    the partial tail block are both indexed; a partial-tail hit is what
+    later forces copy-on-write when the sharer appends its first
+    divergent token (:meth:`PagedKVCache.append_tokens`).
+
+    Entries never pin blocks: the index holds no reference, and
+    :meth:`evict` must be called with every block whose last reference
+    drops (``BlockAllocator.free`` returns exactly that list), so a key
+    can never resolve to a block that was recycled to another request.
+    """
+
+    def __init__(self):
+        self._by_key: dict = {}     # key -> (block, parent, span)
+        self._by_block: dict = {}   # block id -> key
+        self.hits = 0
+        self.queries = 0
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    @staticmethod
+    def chain(parent: Optional[int], tokens) -> int:
+        """Key of the block holding ``tokens``, whose predecessor block
+        (None for the first) hashed to ``parent``."""
+        return hash((parent, tuple(int(t) for t in np.asarray(tokens))))
+
+    def keys_for(self, tokens, block_size: int) -> list[tuple]:
+        """Chained ``(key, parent, span)`` triples for a prompt: one per
+        full block plus one for the partial tail (if any), in block
+        order.  ``span`` is the block's token tuple — lookup/register
+        verify it so hash collisions cannot alias prefixes."""
+        tokens = np.asarray(tokens)
+        out: list[tuple] = []
+        parent = None
+        for start in range(0, len(tokens), block_size):
+            span = tuple(int(t) for t in tokens[start:start + block_size])
+            key = self.chain(parent, span)
+            out.append((key, parent, span))
+            parent = key
+        return out
+
+    def lookup(self, key: int, parent: Optional[int],
+               span: tuple) -> Optional[int]:
+        """Block id whose verified content chain matches, else None."""
+        entry = self._by_key.get(key)
+        if entry is None:
+            return None
+        block, p, s = entry
+        if p != parent or s != span:
+            return None             # 64-bit hash collision: a miss
+        return block
+
+    def register(self, key: int, parent: Optional[int], span: tuple,
+                 block: int) -> None:
+        """First registration wins; a block maps to at most one key."""
+        if key not in self._by_key and block not in self._by_block:
+            self._by_key[key] = (block, parent, span)
+            self._by_block[block] = key
+
+    def evict(self, blocks) -> None:
+        for b in blocks:
+            key = self._by_block.pop(b, None)
+            if key is not None:
+                del self._by_key[key]
 
 
 @dataclasses.dataclass
@@ -90,6 +174,10 @@ class PagedKVCache:
     block_size: int
     allocator: BlockAllocator
     req_blocks: dict = dataclasses.field(default_factory=dict)
+    # optional prefix cache (see PrefixIndex): when set, every path that
+    # returns blocks to the pool must evict them from the index, and
+    # appends into shared blocks copy-on-write first
+    prefix: Optional[PrefixIndex] = None
 
     @classmethod
     def create(cls, *, n_layers: int, n_blocks: int, block_size: int,
@@ -107,32 +195,63 @@ class PagedKVCache:
         )
 
     # -- host-side bookkeeping -------------------------------------------
-    def admit(self, slot: int, prompt_len: int) -> None:
-        """Reserve blocks for a request's prompt KV (after prefill)."""
+    def _free(self, blocks: list[int]) -> None:
+        released = self.allocator.free(blocks)
+        if self.prefix is not None and released:
+            self.prefix.evict(released)
+
+    def admit(self, slot: int, prompt_len: int,
+              shared: tuple[int, ...] = ()) -> None:
+        """Reserve blocks for a request's prompt KV (after prefill).
+
+        ``shared`` is a leading run of already-populated block ids (a
+        prefix-cache hit, see :class:`PrefixIndex`): they are pinned via
+        ``add_ref`` and become this request's first blocks copy-free; only
+        the remaining blocks are freshly allocated."""
         n = -(-max(prompt_len, 1) // self.block_size)
-        blocks = self.allocator.alloc(n)
+        shared = list(shared[:n])
+        for b in shared:
+            self.allocator.add_ref(b)
+        blocks = shared + self.allocator.alloc(n - len(shared))
         self.block_tables[slot, :] = -1
         self.block_tables[slot, :n] = blocks
         self.lengths[slot] = prompt_len
         self.req_blocks[slot] = blocks
 
+    def _cow(self, slot: int, bi: int) -> tuple[int, int]:
+        """Copy-on-write block ``bi`` of ``slot``: allocate a private
+        copy, repoint the table, drop the shared reference.  Returns the
+        (old, new) ids; the caller batches the pool copies."""
+        blocks = self.req_blocks[slot]
+        old = blocks[bi]
+        new = self.allocator.alloc(1)[0]
+        self._free([old])   # refcount > 1 here, so never released
+        blocks[bi] = new
+        self.block_tables[slot, bi] = new
+        return old, new
+
+    def _apply_cow(self, pairs: list[tuple[int, int]]) -> None:
+        if not pairs:
+            return
+        old = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        new = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        self.k_pool = self.k_pool.at[:, new].set(self.k_pool[:, old])
+        self.v_pool = self.v_pool.at[:, new].set(self.v_pool[:, old])
+
     def append_token(self, slot: int) -> None:
-        """Grow by one token; allocate a new block at block boundaries.
-        Same freeze-at-capacity overflow semantics as
+        """Grow by one token; allocate a new block at block boundaries
+        and copy-on-write a shared last block before the append lands in
+        it.  Same freeze-at-capacity overflow semantics as
         :meth:`append_tokens` (a full block table stops growing)."""
-        self.lengths[slot] += 1
-        L = int(self.lengths[slot])
-        n_have = len(self.req_blocks.get(slot, []))
-        n_need = min(-(-L // self.block_size), self.block_tables.shape[1])
-        if n_need > n_have:
-            new = self.allocator.alloc(n_need - n_have)
-            self.block_tables[slot, n_have:n_need] = new
-            self.req_blocks[slot].extend(new)
+        self.append_tokens(np.asarray([slot]))
 
     def append_tokens(self, slots: np.ndarray) -> None:
-        """Batched :meth:`append_token`: grow every slot in ``slots`` by
-        one token, allocating a block only for rows crossing a block
-        boundary (1/block_size of decode steps per slot).
+        """Batched grow-by-one-token for every slot in ``slots``: a block
+        is allocated only for rows crossing a block boundary
+        (1/block_size of decode steps per slot), and a row about to
+        append into a *shared* block (refcount > 1 — prefix-cache
+        partial-tail hit) first copies it on write so the divergent
+        token never corrupts the other holders.
 
         A slot whose block table is already full stops growing: its
         length keeps counting (positions matter for RoPE) but the
@@ -146,11 +265,24 @@ class PagedKVCache:
         for s in slots[crossing]:
             s = int(s)
             blocks = self.req_blocks[s]
-            if len(blocks) >= max_blocks:
-                continue  # table full: decode continues on frozen KV
+            need = min(-(-int(self.lengths[s]) // self.block_size),
+                       max_blocks)
+            if len(blocks) >= need:
+                # table full (frozen KV) or the crossing position is
+                # already covered (admit() reserves >= 1 block even for
+                # an empty prompt, whose first token lands at pos 0)
+                continue
             new = self.allocator.alloc(1)
             self.block_tables[s, len(blocks)] = new[0]
             blocks.extend(new)
+        cow_pairs = []
+        for s in slots[~crossing]:
+            s = int(s)
+            bi = (int(self.lengths[s]) - 1) // self.block_size
+            blocks = self.req_blocks.get(s, [])
+            if bi < len(blocks) and self.allocator.ref_count(blocks[bi]) > 1:
+                cow_pairs.append(self._cow(s, bi))
+        self._apply_cow(cow_pairs)
 
     def ensure_capacity(self, slot: int, new_len: int) -> None:
         """Grow a slot's block list to cover ``new_len`` tokens (chunked
@@ -164,9 +296,33 @@ class PagedKVCache:
             blocks.extend(new)
         self.lengths[slot] = new_len
 
+    def append_demand(self, slots: np.ndarray) -> int:
+        """Blocks :meth:`append_tokens` would allocate for ``slots`` —
+        boundary crossings plus copy-on-write of shared last blocks.  The
+        engine pre-budgets this and preempts until the pool can serve it,
+        so the allocator never raises mid-decode."""
+        slots = np.asarray(slots)
+        if slots.size == 0:
+            return 0
+        max_blocks = self.block_tables.shape[1]
+        need = 0
+        for s in slots:
+            s = int(s)
+            pos = int(self.lengths[s])          # write position after +1
+            blocks = self.req_blocks.get(s, [])
+            if pos % self.block_size == 0:
+                covered = min(-(-(pos + 1) // self.block_size),
+                              max_blocks)
+                need += len(blocks) < covered
+            else:
+                bi = pos // self.block_size
+                need += (bi < len(blocks)
+                         and self.allocator.ref_count(blocks[bi]) > 1)
+        return need
+
     def release(self, slot: int) -> None:
         blocks = self.req_blocks.pop(slot, [])
-        self.allocator.free(blocks)
+        self._free(blocks)
         self.block_tables[slot, :] = -1
         self.lengths[slot] = 0
 

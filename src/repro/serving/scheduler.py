@@ -37,11 +37,12 @@ in-flight jobs via ``SchedulerContext.active_prefill_remaining``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
 from ..core.policies import Policy, SchedulerContext
+from .preemption import LIFOPreemption, PreemptContext, PreemptionPolicy
 from .slot_table import cap_assignment
 
 __all__ = ["PrefillJob", "Scheduler"]
@@ -49,11 +50,24 @@ __all__ = ["PrefillJob", "Scheduler"]
 
 @dataclasses.dataclass
 class PrefillJob:
-    """A mid-prefill request occupying a slot."""
+    """A mid-prefill request occupying a slot.
+
+    ``resume_token`` is set for recompute-on-resume prefills (the request
+    was preempted while decoding and its KV is being rebuilt): when the
+    job finishes, the engine feeds this preserved token back into decode
+    instead of sampling a fresh first token from the prefill logits —
+    the request already generated it before the preemption.
+    ``resume_length`` preserves the victim's KV length when it exceeded
+    what the rebuilt (``max_seq_len``-truncated) token sequence covers —
+    a request that decoded past the cap on frozen KV must keep its RoPE
+    position counter, not restart it at the cap.
+    """
 
     req: object                  # ServeRequest
     tokens: np.ndarray           # prompt (already truncated to max_seq_len)
     done: int = 0                # tokens prefilled so far
+    resume_token: Optional[int] = None
+    resume_length: Optional[int] = None
 
     @property
     def total(self) -> int:
@@ -65,13 +79,16 @@ class PrefillJob:
 
 
 class Scheduler:
-    """Wait queue + admission + chunked-prefill budget (see module doc)."""
+    """Wait queue + admission + chunked-prefill budget + victim selection
+    under memory pressure (see module doc)."""
 
     def __init__(self, policy: Policy, *, prefill_chunk: int = 0,
-                 prefill_budget: int = 0):
+                 prefill_budget: int = 0,
+                 preemption: Optional[PreemptionPolicy] = None):
         self.policy = policy
         self.chunk = int(prefill_chunk)
         self.budget = int(prefill_budget) or self.chunk
+        self.preemption = preemption or LIFOPreemption()
         self.wait: list = []
         self._jobs: dict[int, PrefillJob] = {}   # slot -> job, FCFS order
 
@@ -87,27 +104,75 @@ class Scheduler:
     def submit(self, req) -> None:
         self.wait.append(req)
 
+    def requeue(self, req) -> None:
+        """Return a preempted request to the *front* of the wait queue:
+        it was admitted once already, so it outranks everything that
+        arrived after it (the vLLM recompute-preemption discipline)."""
+        self.wait.insert(0, req)
+
     # -- admission ------------------------------------------------------
-    def admit(self, ctx: SchedulerContext, caps: np.ndarray) -> list:
+    def admit(self, ctx: SchedulerContext, caps: np.ndarray, *,
+              block_budget: Optional[int] = None,
+              blocks_of: Optional[Callable] = None) -> list:
         """Run the routing policy and return [(req, worker), ...] for the
         admitted requests (removed from the queue).  A policy may
         over-subscribe a worker beyond its free slots; the excess requests
-        simply keep waiting instead of crashing placement."""
+        simply keep waiting instead of crashing placement.
+
+        ``block_budget``/``blocks_of`` gate admission on KV-pool capacity
+        (paged backend): requests are admitted in assignment order only
+        while their cumulative block demand fits the budget, and the gate
+        is *strict FCFS* — the first request that does not fit stops
+        admission for the step (no head-of-line bypass), so an oversized
+        pool-pressure wave degrades to waiting instead of to a
+        ``MemoryError`` mid-prefill."""
         assignment = cap_assignment(
             np.asarray(self.policy.assign(ctx)), caps)
-        to_admit = [(self.wait[pos], int(g))
-                    for pos, g in enumerate(assignment) if g >= 0]
+        to_admit = []
+        left = block_budget
+        for pos, g in enumerate(assignment):
+            if g < 0:
+                continue
+            req = self.wait[pos]
+            if left is not None:
+                need = blocks_of(req)
+                if need > left:
+                    break
+                left -= need
+            to_admit.append((req, int(g)))
         if to_admit:
             admitted = {id(r) for r, _ in to_admit}
             self.wait = [r for r in self.wait if id(r) not in admitted]
         return to_admit
 
+    # -- memory pressure ------------------------------------------------
+    def select_victim(self, ctx: PreemptContext) -> Optional[int]:
+        """Pick the active slot to preempt (None if no candidates)."""
+        if ctx.slots.size == 0:
+            return None
+        return self.preemption.select(ctx)
+
     # -- chunked prefill ------------------------------------------------
-    def register_job(self, slot: int, req, tokens: np.ndarray) -> None:
-        self._jobs[int(slot)] = PrefillJob(req=req, tokens=tokens)
+    def register_job(self, slot: int, req, tokens: np.ndarray, *,
+                     done: int = 0,
+                     resume_token: Optional[int] = None,
+                     resume_length: Optional[int] = None) -> None:
+        """Track a mid-prefill request on ``slot``.  ``done`` resumes a
+        preempted-and-swapped-back job at its old offset;
+        ``resume_token``/``resume_length`` mark a recompute-on-resume
+        prefill (see :class:`PrefillJob`)."""
+        self._jobs[int(slot)] = PrefillJob(req=req, tokens=tokens,
+                                           done=int(done),
+                                           resume_token=resume_token,
+                                           resume_length=resume_length)
 
     def job(self, slot: int) -> Optional[PrefillJob]:
         return self._jobs.get(int(slot))
+
+    def drop_job(self, slot: int) -> Optional[PrefillJob]:
+        """Remove and return the job on ``slot`` (victim preempted or
+        request finished mid-prefill); None if the slot has no job."""
+        return self._jobs.pop(int(slot), None)
 
     def plan_chunks(self) -> list[tuple[int, int, int]]:
         """Pick this step's chunk work: [(slot, offset, n_tokens), ...],

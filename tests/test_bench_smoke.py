@@ -18,10 +18,13 @@ def test_smoke_schema_and_finite_timings():
     check(doc2)
     sections = {r["section"] for r in doc2["rows"]}
     assert sections == {"solver", "simulator", "batch", "engine",
-                        "engine_paged"}
+                        "engine_paged", "engine_preempt"}
     kinds = {r.get("kind") for r in doc2["rows"]
              if r["section"] == "engine_paged"}
     assert kinds == {"grid", "stall"}
+    preempt_kinds = {r.get("kind") for r in doc2["rows"]
+                     if r["section"] == "engine_preempt"}
+    assert preempt_kinds == {"pressure", "prefix"}
 
 
 def test_check_rejects_broken_docs():

@@ -12,6 +12,7 @@ from repro.kernels.ref import decode_attention_ref
 from repro.serving.paged_cache import (
     BlockAllocator,
     PagedKVCache,
+    PrefixIndex,
     paged_decode_attention_ref,
 )
 
@@ -46,6 +47,30 @@ class TestAllocator:
             a.free(x[:1])
         assert a.n_free == 4  # free list not corrupted by the bad call
 
+    def test_double_free_message_names_block_and_refcount(self):
+        """The guard must identify the offending block AND its refcount —
+        a bare 'double free' is useless when a preempt/COW/release path
+        mis-pairs its frees."""
+        a = BlockAllocator(4)
+        (b,) = a.alloc(1)
+        a.free([b])
+        with pytest.raises(ValueError,
+                           match=rf"block {b}: refcount is 0"):
+            a.free([b])
+        with pytest.raises(ValueError, match=r"bad block id 9 \(pool has "
+                                             r"4 blocks\)"):
+            a.free([9])
+
+    def test_free_returns_released_blocks(self):
+        """free() reports which blocks actually returned to the pool so
+        a prefix index can evict exactly those (a still-referenced
+        shared block must NOT be reported)."""
+        a = BlockAllocator(4)
+        x, y = a.alloc(2)
+        a.add_ref(x)
+        assert a.free([x, y]) == [y]     # x still referenced
+        assert a.free([x]) == [x]
+
     def test_free_unallocated_raises(self):
         a = BlockAllocator(4)
         with pytest.raises(ValueError, match="double free"):
@@ -74,6 +99,49 @@ class TestAllocator:
         a.free(x)
         y = a.alloc(2)
         assert sorted(y) == sorted(x)
+
+
+class TestPrefixIndex:
+    def test_chained_keys_distinguish_position(self):
+        """Equal block content under different predecessors must key
+        differently — a match must imply the whole prefix matches."""
+        idx = PrefixIndex()
+        ka = idx.keys_for([1, 2, 3, 4, 9, 9], block_size=4)
+        kb = idx.keys_for([5, 2, 3, 4, 9, 9], block_size=4)
+        assert len(ka) == len(kb) == 2
+        assert ka[0][0] != kb[0][0]
+        assert ka[1][0] != kb[1][0]    # same tail tokens, different parent
+        kc = idx.keys_for([1, 2, 3, 4, 9, 9], block_size=4)
+        assert kc == ka                # deterministic within a process
+
+    def test_register_lookup_evict(self):
+        idx = PrefixIndex()
+        ((key, parent, span),) = idx.keys_for([1, 2, 3], block_size=4)
+        assert idx.lookup(key, parent, span) is None
+        idx.register(key, parent, span, 7)
+        assert idx.lookup(key, parent, span) == 7
+        idx.register(key, parent, span, 8)   # first registration wins
+        assert idx.lookup(key, parent, span) == 7
+        idx.evict([7])
+        assert idx.lookup(key, parent, span) is None
+        assert len(idx) == 0
+        idx.evict([7])                 # idempotent
+
+    def test_lookup_verifies_content_not_just_hash(self):
+        """A hash collision must degrade to a miss, never to serving
+        another prompt's KV: lookup compares the stored (parent, span)."""
+        idx = PrefixIndex()
+        ((key, parent, span),) = idx.keys_for([1, 2, 3], block_size=4)
+        idx.register(key, parent, span, 7)
+        assert idx.lookup(key, parent, (1, 2, 9)) is None
+        assert idx.lookup(key, 12345, span) is None
+        assert idx.lookup(key, parent, span) == 7
+
+    def test_partial_tail_keys_differ_from_full_block(self):
+        idx = PrefixIndex()
+        full = idx.keys_for([1, 2, 3, 4], block_size=4)
+        part = idx.keys_for([1, 2, 3], block_size=4)
+        assert full[0][0] != part[0][0]
 
 
 class TestPagedKernel:
@@ -127,6 +195,25 @@ class TestPagedCache:
         want = decode_attention_ref(q, k, v, jnp.asarray(lens, jnp.int32))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-5)
+
+    def test_empty_prompt_first_append_reuses_reserved_block(self):
+        """admit(slot, 0) reserves one block; the first decode token
+        (position 0) must land in it, not allocate a second — the
+        crossing heuristic alone would leak a block per empty prompt."""
+        cache = PagedKVCache.create(
+            n_layers=1, n_blocks=4, block_size=4, n_kv_heads=1,
+            head_dim=8, max_requests=1, max_blocks_per_req=4)
+        cache.admit(0, 0)
+        assert len(cache.req_blocks[0]) == 1
+        assert cache.append_demand(np.array([0])) == 0
+        cache.append_token(0)             # pos 0: reserved block covers it
+        assert len(cache.req_blocks[0]) == 1
+        for _ in range(3):
+            cache.append_token(0)         # fill the block (4 tokens)
+        assert len(cache.req_blocks[0]) == 1
+        assert cache.append_demand(np.array([0])) == 1
+        cache.append_token(0)             # pos 4: genuine crossing
+        assert len(cache.req_blocks[0]) == 2
 
     def test_append_grows_blocks(self):
         cache = PagedKVCache.create(
