@@ -28,6 +28,18 @@ precisely for this):
   long prompts lands, synchronous prefill vs chunked
   (``prefill_chunk``) — chunking bounds the per-step prompt work so
   decode is never stalled behind a wave.
+* **fleet** — the two-tier serving layer (``repro.fleet``).
+  ``kind="scenario"`` rows run each named scenario trace (steady /
+  flash_crowd / diurnal / agentic / long_doc) through a FleetServer of
+  R engine replicas once per router, with the step-time constants in
+  the attention-dominated regime (per-step wall tracks the max resident
+  load, so the barrier actually prices imbalance); metrics come from
+  the telemetry subsystem (mean cross-replica imbalance,
+  energy-per-token including barrier idle, TTFT p95, SLO attainment).
+  The CI gate: ``router="bfio"`` beats ``"round_robin"`` on both
+  imbalance and energy-per-token on >= 3 of the 5 scenarios.  The
+  ``kind="parity"`` row anchors the layer: ``fleet(R=1, router=*)``
+  stats are bit-identical to a bare ServingEngine on the same stream.
 * **engine_preempt** — the memory-pressure subsystem.  ``kind=
   "pressure"`` rows: the same request stream through a pool sized at
   ``pool_frac`` (0.5) of the unconstrained peak-resident demand, once per
@@ -403,6 +415,101 @@ def _engine_prefix_case(G: int, B: int, *, shared_len: int = 32,
     return out
 
 
+# Fleet cases run the engines' simulated clock in the attention-dominated
+# regime (step wall-time tracks the max resident load instead of being
+# swamped by the constant overhead), so cross-replica imbalance shows up
+# in energy exactly as the paper's barrier model prices it.
+FLEET_TIMING = dict(step_overhead=1e-3, t_token=2e-4)
+
+
+def _fleet_case(R: int, G: int, B: int, *, n_requests: int,
+                routers=("round_robin", "bfio"), load_factor: float = 0.8,
+                seed: int = 0, jsonl_dir: str | None = None) -> list[dict]:
+    """Scenario sweep: every named fleet scenario once per router, all
+    metrics read from the telemetry subsystem."""
+    from repro.fleet import (
+        SCENARIOS,
+        FleetServer,
+        FleetTelemetry,
+        SLOSpec,
+        make_scenario,
+    )
+    from repro.serving import EngineConfig
+
+    st = _engine_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                     **FLEET_TIMING)
+    rows = []
+    for name in SCENARIOS:
+        sc = make_scenario(name, n_requests=n_requests, n_replicas=R,
+                           n_workers=G, slots_per_worker=B, max_seq_len=64,
+                           vocab_size=128, seed=seed,
+                           load_factor=load_factor, **FLEET_TIMING)
+        row = {"section": "fleet", "kind": "scenario", "scenario": name,
+               "R": R, "G": G, "B": B, "n_requests": sc.n_requests,
+               "load_factor": load_factor}
+        for router in routers:
+            tel = FleetTelemetry(slo=SLOSpec(ttft_s=1.0, tpot_s=0.05))
+            fs = FleetServer(st["cfg"], st["params"], ec, n_replicas=R,
+                             router=router, policy="bfio_h0",
+                             mesh=st["mesh"], telemetry=tel)
+            fs.submit_scenario(sc)
+            t0 = time.time()
+            stats = fs.run(max_steps=200_000)
+            wall = time.time() - t0
+            s = tel.summary()
+            row[f"{router}_imbalance"] = s["mean_cross_imbalance"]
+            row[f"{router}_energy_per_token"] = s["energy_per_token"]
+            row[f"{router}_throughput_tok_s"] = stats["throughput_tok_s"]
+            row[f"{router}_ttft_p95"] = s["ttft"]["p95"]
+            row[f"{router}_slo_attainment"] = s["slo_attainment"]
+            row[f"{router}_completed"] = s["completed"]
+            row[f"{router}_failed"] = s["failed"]
+            row[f"{router}_steps"] = stats["steps"]
+            row[f"{router}_wall_s"] = wall
+            if jsonl_dir is not None and router == "bfio":
+                tel.write_jsonl(os.path.join(
+                    jsonl_dir, f"fleet_telemetry_{name}.jsonl"))
+        if {"round_robin", "bfio"} <= set(routers):
+            row["bfio_wins"] = bool(
+                row["bfio_imbalance"] < row["round_robin_imbalance"]
+                and (row["bfio_energy_per_token"]
+                     < row["round_robin_energy_per_token"]))
+        rows.append(row)
+    return rows
+
+
+def _fleet_parity_case(G: int, B: int, *, n_rounds: float = 1.5,
+                       seed: int = 7) -> dict:
+    """fleet(R=1, router=*) must be bit-identical to a bare engine on
+    the same stream — the anchor tying the fleet layer to the
+    exhaustively-tested single-engine semantics."""
+    from repro.core import make_policy
+    from repro.fleet import FleetServer
+    from repro.serving import EngineConfig, ServingEngine
+
+    st = _engine_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64)
+    eng = ServingEngine(st["cfg"], st["params"], ec,
+                        make_policy("bfio_h0"), mesh=st["mesh"])
+    for r in _engine_requests(G, B, n_rounds=n_rounds, seed=seed):
+        eng.submit(r)
+    bare = eng.run(max_steps=100_000)
+    routers = ("round_robin", "least_loaded", "pod2", "bfio")
+    equal = True
+    for router in routers:
+        fs = FleetServer(st["cfg"], st["params"], ec, n_replicas=1,
+                         router=router, policy="bfio_h0", mesh=st["mesh"])
+        for r in _engine_requests(G, B, n_rounds=n_rounds, seed=seed):
+            fs.submit(r)
+        stats = fs.run(max_steps=100_000)
+        equal = equal and (stats["replicas"][0] == bare)
+    return {"section": "fleet", "kind": "parity", "G": G, "B": B,
+            "n_requests": int(G * B * n_rounds),
+            "routers": list(routers), "steps": bare["steps"],
+            "stats_equal": equal}
+
+
 _STALL_STATE: dict = {}
 
 
@@ -511,8 +618,19 @@ def _engine_stall_case(G: int, B: int, *, chunk: int = 8,
             "burst_steps_chunked": c_steps}
 
 
+ALL_SECTIONS = ("solver", "simulator", "batch", "engine", "engine_paged",
+                "engine_preempt", "fleet")
+
+
 def run(full: bool = False, smoke: bool = False,
-        out_path: str | None = None) -> dict:
+        out_path: str | None = None, sections=None) -> dict:
+    if sections is None:
+        sections = ALL_SECTIONS
+    sections = set(sections)
+    unknown = sections - set(ALL_SECTIONS)
+    if unknown:
+        raise ValueError(f"unknown bench sections {sorted(unknown)} "
+                         f"(have {list(ALL_SECTIONS)})")
     if smoke:
         solver_grid = [(4, 16)]
         sim_grid = [(8, 4)]
@@ -524,6 +642,9 @@ def run(full: bool = False, smoke: bool = False,
         stall_shape = (2, 2)
         stall_kw = dict(chunk=16, prompt_len=64, warm_n=2, repeats=1,
                         tiny_model=True)
+        fleet_shape = (4, 2, 2)       # R, G, B
+        fleet_kw = dict(n_requests=32, routers=("round_robin", "bfio"))
+        fleet_parity_shape = (2, 2)
         n_rounds, iters = 2.0, 2
     else:
         solver_grid = [(G, N) for G in (64, 256, 1024)
@@ -536,10 +657,16 @@ def run(full: bool = False, smoke: bool = False,
         prefix_grid = [(4, 8)]
         stall_shape = (4, 8)
         stall_kw = dict(chunk=8, prompt_len=192, warm_n=16, repeats=7)
+        fleet_shape = (4, 4, 4)
+        fleet_kw = dict(
+            n_requests=96,
+            routers=("round_robin", "least_loaded", "pod2", "bfio"),
+            jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
+        fleet_parity_shape = (2, 4)
         n_rounds, iters = 4.0, 10
 
     rows = []
-    for G, N in solver_grid:
+    for G, N in solver_grid if "solver" in sections else []:
         # the dense baseline materializes (N, N, W) f32 tensors; skip it at
         # N=2048 (>150 MB per temporary) unless --full
         dense_ok = N <= 512 or full
@@ -553,27 +680,27 @@ def run(full: bool = False, smoke: bool = False,
               f"(refine-only {r['refine_speedup'] or float('nan'):5.1f}x) "
               f"dJ={r['quality_rel_diff'] if r['quality_rel_diff'] is not None else float('nan'):+.3%}",
               flush=True)
-    for G, B in sim_grid:
+    for G, B in sim_grid if "simulator" in sections else []:
         r = _sim_case(G, B, n_rounds=n_rounds)
         rows.append(r)
         print(f"  sim    G={G:<5d} B={B:<3d} pre={r['pre_steps_per_s']:8.0f} "
               f"post={r['post_steps_per_s']:8.0f} steps/s "
               f"speedup={r['speedup']:5.1f}x equal={r['metrics_equal']}",
               flush=True)
-    for C, G, N in batch_grid:
+    for C, G, N in batch_grid if "batch" in sections else []:
         r = _batch_case(C, G, N, iters=iters)
         rows.append(r)
         print(f"  batch  C={C} G={G} N={N} batch={r['batch_us']/1e3:.1f}ms "
               f"seq={r['sequential_us']/1e3:.1f}ms speedup={r['speedup']:.1f}x",
               flush=True)
-    for G, B in engine_grid:
+    for G, B in engine_grid if "engine" in sections else []:
         r = _engine_case(G, B)
         rows.append(r)
         print(f"  engine G={G:<3d} B={B:<3d} pre={r['pre_steps_per_s']:7.1f} "
               f"post={r['post_steps_per_s']:7.1f} steps/s "
               f"speedup={r['speedup']:5.1f}x equal={r['metrics_equal']}",
               flush=True)
-    for G, B in paged_grid:
+    for G, B in paged_grid if "engine_paged" in sections else []:
         r = _engine_paged_case(G, B)
         rows.append(r)
         print(f"  paged  G={G:<3d} B={B:<3d} "
@@ -581,7 +708,7 @@ def run(full: bool = False, smoke: bool = False,
               f"paged={r['paged_steps_per_s']:7.1f} steps/s "
               f"kv={r['kv_bytes_ratio']:.2f}x of dense "
               f"equal={r['metrics_equal']}", flush=True)
-    for G, B in preempt_grid:
+    for G, B in preempt_grid if "engine_preempt" in sections else []:
         for r in _engine_preempt_case(G, B):
             rows.append(r)
             print(f"  preempt G={G:<3d} B={B:<3d} mode={r['mode']:<9s} "
@@ -590,25 +717,44 @@ def run(full: bool = False, smoke: bool = False,
                   f"swapped={r['tokens_swapped']:<6d} "
                   f"recomputed={r['tokens_recomputed']:<6d} "
                   f"gens_equal={r['gens_equal']}", flush=True)
-    for G, B in prefix_grid:
+    for G, B in prefix_grid if "engine_preempt" in sections else []:
         r = _engine_prefix_case(G, B)
         rows.append(r)
         print(f"  prefix G={G:<3d} B={B:<3d} "
               f"hit_rate={r['prefix_hit_rate']:.2f} "
               f"kv={r['kv_bytes_ratio']:.2f}x of uncached "
               f"gens_equal={r['gens_equal']}", flush=True)
-    r = _engine_stall_case(*stall_shape, **stall_kw)
-    rows.append(r)
-    print(f"  stall  G={r['G']} B={r['B']} "
-          f"sync={r['stall_x_sync']:.1f}x "
-          f"chunked={r['stall_x_chunked']:.1f}x of steady step "
-          f"(burst of {r['burst_prompts']}x{r['prompt_len']}-token "
-          f"prompts)", flush=True)
+    if "engine_paged" in sections:
+        r = _engine_stall_case(*stall_shape, **stall_kw)
+        rows.append(r)
+        print(f"  stall  G={r['G']} B={r['B']} "
+              f"sync={r['stall_x_sync']:.1f}x "
+              f"chunked={r['stall_x_chunked']:.1f}x of steady step "
+              f"(burst of {r['burst_prompts']}x{r['prompt_len']}-token "
+              f"prompts)", flush=True)
+    if "fleet" in sections:
+        wins = 0
+        for r in _fleet_case(*fleet_shape, **fleet_kw):
+            rows.append(r)
+            wins += r["bfio_wins"]
+            print(f"  fleet  {r['scenario']:<12s} R={r['R']} "
+                  f"imb rr={r['round_robin_imbalance']:7.1f} "
+                  f"bfio={r['bfio_imbalance']:7.1f}  "
+                  f"J/tok rr={r['round_robin_energy_per_token']:.3f} "
+                  f"bfio={r['bfio_energy_per_token']:.3f}  "
+                  f"win={r['bfio_wins']}", flush=True)
+        r = _fleet_parity_case(*fleet_parity_shape)
+        rows.append(r)
+        print(f"  fleet  parity R=1 vs bare engine over "
+              f"{len(r['routers'])} routers: "
+              f"stats_equal={r['stats_equal']}  "
+              f"(bfio wins {wins}/5 scenarios)", flush=True)
 
     doc = {
         "meta": {
             "bench": "balancer",
             "smoke": smoke,
+            "sections": sorted(sections),
             "W": W,
             "swap_iters": SWAP_ITERS,
             "prune_k": PRUNE_K,
@@ -620,26 +766,31 @@ def run(full: bool = False, smoke: bool = False,
                     "compact decode / paged KV backend + chunked prefill "
                     "(engine_paged section) / preemption + prefix "
                     "caching under memory pressure (engine_preempt "
-                    "section)",
+                    "section) / two-tier routing across engine replicas "
+                    "(fleet section)",
         },
         "rows": rows,
     }
-    if out_path is None and smoke:
-        # never clobber the tracked full-grid artifact with smoke numbers
+    if out_path is None and (smoke or sections != set(ALL_SECTIONS)):
+        # never clobber the tracked full-grid artifact with smoke or
+        # partial-section numbers
         out_path = os.path.join(tempfile.mkdtemp(prefix="bench_smoke_"),
                                 "BENCH_balancer.json")
     path = out_path or os.path.join(ROOT, "BENCH_balancer.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"  wrote {path}")
-    if not smoke:
+    if not smoke and sections == set(ALL_SECTIONS):
         from .common import save_rows
         save_rows("balancer_bench", rows, meta=doc["meta"])
     return doc
 
 
-def main(full: bool = False, smoke: bool = False):
-    run(full=full, smoke=smoke)
+def main(full: bool = False, smoke: bool = False,
+         sections: str | None = None):
+    run(full=full, smoke=smoke,
+        sections=[s.strip() for s in sections.split(",") if s.strip()]
+        if sections else None)
 
 
 if __name__ == "__main__":
@@ -648,4 +799,7 @@ if __name__ == "__main__":
                     help="also measure the dense baseline at N=2048")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, schema check only")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of sections to run "
+                         f"(default: all of {','.join(ALL_SECTIONS)})")
     main(**vars(ap.parse_args()))

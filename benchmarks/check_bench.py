@@ -12,6 +12,10 @@ import math
 import os
 import tempfile
 
+from .balancer_bench import ALL_SECTIONS as _SECTIONS
+
+ALL_SECTIONS = set(_SECTIONS)   # single source of truth: balancer_bench
+
 SOLVER_KEYS = {"G", "N", "W", "swap_iters", "prune_k", "post_tiled_us",
                "J_post", "greedy_us", "pre_dense_us", "J_pre", "speedup",
                "refine_speedup", "quality_rel_diff"}
@@ -44,6 +48,19 @@ PREEMPT_PREFIX_KEYS = {"G", "B", "policy", "n_requests",
                        "steps_per_s_on", "kv_peak_bytes_off",
                        "kv_peak_bytes_on", "prefix_hits", "prefix_queries",
                        "prefix_hit_rate", "kv_bytes_ratio", "gens_equal"}
+# fleet rows always carry the round_robin + bfio columns (full runs add
+# least_loaded / pod2); the scenario gate below needs exactly these two
+FLEET_SCENARIO_KEYS = {"scenario", "R", "G", "B", "n_requests",
+                       "load_factor", "bfio_wins"} | {
+    f"{r}_{m}" for r in ("round_robin", "bfio")
+    for m in ("imbalance", "energy_per_token", "throughput_tok_s",
+              "ttft_p95", "slo_attainment", "completed", "failed",
+              "steps", "wall_s")}
+FLEET_PARITY_KEYS = {"G", "B", "n_requests", "routers", "steps",
+                     "stats_equal"}
+FLEET_SCENARIOS = {"steady", "flash_crowd", "diurnal", "agentic",
+                   "long_doc"}
+FLEET_MIN_WINS = 3
 
 
 def _finite_pos(x) -> bool:
@@ -51,25 +68,44 @@ def _finite_pos(x) -> bool:
 
 
 def check(doc: dict) -> None:
-    """Raise AssertionError on any schema/sanity violation."""
+    """Raise AssertionError on any schema/sanity violation.  The
+    expected section set follows ``meta["sections"]`` (the --sections
+    filter); docs without it are required to carry every section."""
     assert set(doc) >= {"meta", "rows"}, "missing meta/rows"
     meta = doc["meta"]
     assert meta.get("bench") == "balancer"
     rows = doc["rows"]
     assert rows, "no benchmark rows"
+    expected = set(meta.get("sections") or ALL_SECTIONS)
+    assert expected <= ALL_SECTIONS, expected - ALL_SECTIONS
     sections = {r.get("section") for r in rows}
-    assert sections >= {"solver", "simulator", "batch", "engine",
-                        "engine_paged", "engine_preempt"}, sections
-    paged_kinds = {r.get("kind") for r in rows
-                   if r.get("section") == "engine_paged"}
-    assert paged_kinds == {"grid", "stall"}, paged_kinds
-    preempt_kinds = {r.get("kind") for r in rows
-                     if r.get("section") == "engine_preempt"}
-    assert preempt_kinds == {"pressure", "prefix"}, preempt_kinds
-    preempt_modes = {r.get("mode") for r in rows
-                     if r.get("section") == "engine_preempt"
-                     and r.get("kind") == "pressure"}
-    assert preempt_modes == {"swap", "recompute"}, preempt_modes
+    assert sections == expected, (sections, expected)
+    if "engine_paged" in expected:
+        paged_kinds = {r.get("kind") for r in rows
+                       if r.get("section") == "engine_paged"}
+        assert paged_kinds == {"grid", "stall"}, paged_kinds
+    if "engine_preempt" in expected:
+        preempt_kinds = {r.get("kind") for r in rows
+                         if r.get("section") == "engine_preempt"}
+        assert preempt_kinds == {"pressure", "prefix"}, preempt_kinds
+        preempt_modes = {r.get("mode") for r in rows
+                         if r.get("section") == "engine_preempt"
+                         and r.get("kind") == "pressure"}
+        assert preempt_modes == {"swap", "recompute"}, preempt_modes
+    if "fleet" in expected:
+        fleet_kinds = {r.get("kind") for r in rows
+                       if r.get("section") == "fleet"}
+        assert fleet_kinds == {"scenario", "parity"}, fleet_kinds
+        scen = [r for r in rows if r.get("section") == "fleet"
+                and r.get("kind") == "scenario"]
+        assert ({r["scenario"] for r in scen} == FLEET_SCENARIOS), \
+            {r["scenario"] for r in scen}
+        # THE fleet gate: the paper's principle must pay at the replica
+        # tier — BF-IO routing beats round-robin on both cross-replica
+        # imbalance and energy-per-token on most scenario traces
+        wins = sum(bool(r["bfio_wins"]) for r in scen)
+        assert wins >= FLEET_MIN_WINS, \
+            f"bfio beat round_robin on only {wins}/{len(scen)} scenarios"
     for r in rows:
         sec = r["section"]
         if sec == "solver":
@@ -154,14 +190,34 @@ def check(doc: dict) -> None:
                 assert r["kv_bytes_ratio"] < 1.0, r["kv_bytes_ratio"]
                 assert r["gens_equal"] is True, \
                     "prefix-cache hits changed generations"
+        elif sec == "fleet":
+            if r.get("kind") == "scenario":
+                assert FLEET_SCENARIO_KEYS <= set(r), \
+                    FLEET_SCENARIO_KEYS - set(r)
+                for router in ("round_robin", "bfio"):
+                    assert _finite_pos(r[f"{router}_throughput_tok_s"])
+                    assert _finite_pos(r[f"{router}_energy_per_token"])
+                    assert r[f"{router}_imbalance"] >= 0
+                    assert 0.0 <= r[f"{router}_slo_attainment"] <= 1.0
+                    # every scenario stream is servable: nothing fails,
+                    # everything completes
+                    assert r[f"{router}_failed"] == 0
+                    assert r[f"{router}_completed"] == r["n_requests"]
+            else:
+                assert r.get("kind") == "parity", r.get("kind")
+                assert FLEET_PARITY_KEYS <= set(r), \
+                    FLEET_PARITY_KEYS - set(r)
+                assert r["stats_equal"] is True, \
+                    "fleet(R=1) diverged from the bare ServingEngine"
 
 
-def run_smoke() -> dict:
+def run_smoke(sections=None) -> dict:
     """Run the balancer bench on tiny shapes, validate, return the doc."""
     from .balancer_bench import run
 
     with tempfile.TemporaryDirectory() as d:
-        doc = run(smoke=True, out_path=os.path.join(d, "BENCH_balancer.json"))
+        doc = run(smoke=True, out_path=os.path.join(d, "BENCH_balancer.json"),
+                  sections=sections)
     check(doc)
     return doc
 

@@ -17,6 +17,7 @@ from .synthetic import WorkloadSpec, decode_sampler, prefill_sampler
 __all__ = [
     "poisson_trace",
     "bursty_trace",
+    "diurnal_trace",
     "batched_rounds_instance",
     "overload_rate",
 ]
@@ -96,6 +97,48 @@ def bursty_trace(
     ]
     return ArrivalInstance(requests=reqs, drift=drift or unit_drift(),
                            name=f"{spec.name}-bursty")
+
+
+def diurnal_trace(
+    spec: WorkloadSpec,
+    *,
+    n_requests: int,
+    rate: float,
+    amplitude: float = 0.8,
+    period: float = 240.0,
+    drift: Optional[DriftModel] = None,
+    seed: int = 0,
+) -> ArrivalInstance:
+    """Diurnal ramp: nonhomogeneous Poisson with a sinusoidal rate
+
+        lambda(t) = rate * (1 + amplitude * sin(2 pi t / period))
+
+    sampled by thinning against ``lambda_max = rate * (1 + amplitude)``.
+    The mean rate over a full period is ``rate``; peaks reach
+    ``(1 + amplitude) * rate`` and troughs ``(1 - amplitude) * rate`` —
+    the day/night load swing a fleet router must ride without
+    re-provisioning."""
+    if not (0.0 <= amplitude <= 1.0):
+        raise ValueError(f"amplitude must be in [0, 1], got {amplitude}")
+    rng = np.random.default_rng(seed)
+    lam_max = rate * (1.0 + amplitude)
+    times = []
+    t = 0.0
+    while len(times) < n_requests:
+        t += rng.exponential(1.0 / lam_max)
+        lam = rate * (1.0 + amplitude * np.sin(2.0 * np.pi * t / period))
+        if rng.uniform() * lam_max <= lam:
+            times.append(t)
+    times = np.asarray(times)
+    s = prefill_sampler(spec)(rng, n_requests)
+    o = decode_sampler(spec)(rng, n_requests)
+    reqs = [
+        Request(rid=i, arrival_step=0, prefill=float(s[i]),
+                decode_len=int(o[i]), arrival_time=float(times[i]))
+        for i in range(n_requests)
+    ]
+    return ArrivalInstance(requests=reqs, drift=drift or unit_drift(),
+                           name=f"{spec.name}-diurnal")
 
 
 def batched_rounds_instance(

@@ -1,0 +1,27 @@
+"""Fleet serving layer: two-tier BF-IO routing across engine replicas.
+
+The tier above :mod:`repro.serving` — R independent engine replicas
+behind a pluggable :class:`~repro.fleet.router.FleetRouter`
+(round-robin / least-loaded / power-of-two / BF-IO via the batched
+solver), driven barrier-stepped by
+:class:`~repro.fleet.server.FleetServer`, fed by the named scenario
+traces of :mod:`repro.fleet.workloads`, and observed through the
+JSONL-exporting :mod:`repro.fleet.telemetry` subsystem."""
+from .router import (  # noqa: F401
+    BFIORouter,
+    FleetRouter,
+    LeastLoadedRouter,
+    PowerOfDRouter,
+    RoundRobinRouter,
+    RouterContext,
+    make_router,
+)
+from .server import FleetServer  # noqa: F401
+from .telemetry import FleetTelemetry, SLOSpec, percentiles  # noqa: F401
+from .workloads import (  # noqa: F401
+    SCENARIOS,
+    FleetRequest,
+    Scenario,
+    make_scenario,
+    validate_scenario,
+)

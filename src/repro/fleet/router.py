@@ -1,0 +1,230 @@
+"""Fleet-tier routing: which *replica* serves a request.
+
+The paper's balancing principle is scale-free: the same decision problem
+that places a request on a decode worker inside one engine reappears one
+tier up when heavy traffic is spread across R independent engine
+replicas.  :class:`FleetRouter` is that tier's seam — it sees only
+fleet-level observables (per-replica committed load/count/capacity and
+the waiting candidates' prefill sizes) and maps every waiting request to
+a replica.  The replica's own admission scheduler
+(:mod:`repro.serving.scheduler` + a :class:`~repro.core.policies.Policy`)
+then picks the worker slot, so with the BF-IO router *and* a BF-IO
+engine policy the principle acts at both levels.
+
+Routing is **total**: every candidate is placed every step (replicas
+queue internally; the fleet never holds requests back).  That is what
+makes ``fleet(R=1, router=*)`` bit-identical to a bare
+:class:`~repro.serving.engine.ServingEngine` on the same stream — the
+single replica receives the identical submission sequence — and it
+matches how real fleet LBs work: forward on arrival, queue at the
+replica.  Load-aware routers therefore balance *committed* load
+(resident work plus queued prefill), not just resident work.
+
+Routers mirror the engine-policy taxonomy (Appendix A.1):
+
+* ``round_robin`` — cyclic, size- and load-agnostic;
+* ``least_loaded`` — sequential argmin of committed load, counting each
+  placement's prefill size (size-aware JSQ analogue);
+* ``pod2`` — power-of-d choices on committed request counts;
+* ``bfio`` — the paper's Algorithm 1 at fleet scope: one batched
+  windowed-imbalance solve over all waiting candidates via the existing
+  :func:`~repro.core.balancer_jax.bfio_assign_batch` (a leading cluster
+  axis of 1 here; multi-cluster fleets batch many routing solves into
+  the same compiled call).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.workload import DriftModel, unit_drift
+
+__all__ = [
+    "RouterContext",
+    "FleetRouter",
+    "RoundRobinRouter",
+    "LeastLoadedRouter",
+    "PowerOfDRouter",
+    "BFIORouter",
+    "make_router",
+]
+
+
+@dataclasses.dataclass
+class RouterContext:
+    """Fleet-level observables at barrier step k.
+
+    ``loads``/``counts`` are *committed* quantities: resident work on the
+    replica's workers plus the prefill work already queued at (but not
+    yet admitted by) the replica — the router's placements from earlier
+    steps must count against a replica even before its scheduler admits
+    them, or a burst would pile onto whichever replica looked idle when
+    it began."""
+
+    k: int
+    loads: np.ndarray        # (R,) committed load per replica
+    counts: np.ndarray       # (R,) committed request count per replica
+    free_slots: np.ndarray   # (R,) currently free engine slots
+    wait_sizes: np.ndarray   # (n,) candidate prefill sizes, arrival order
+    drift: DriftModel = dataclasses.field(default_factory=unit_drift)
+    rng: np.random.Generator = dataclasses.field(
+        default_factory=lambda: np.random.default_rng(0))
+
+    @property
+    def R(self) -> int:
+        return int(self.loads.shape[0])
+
+    @property
+    def n_wait(self) -> int:
+        return int(self.wait_sizes.shape[0])
+
+
+class FleetRouter:
+    """Maps every waiting request to a replica (total assignment)."""
+
+    name = "base"
+
+    def reset(self) -> None:  # pragma: no cover - stateless default
+        pass
+
+    def route(self, ctx: RouterContext) -> np.ndarray:
+        """(n_wait,) replica id per candidate — every entry in
+        [0, R)."""
+        raise NotImplementedError
+
+
+class RoundRobinRouter(FleetRouter):
+    """Cyclic dispatch, irrespective of size and load."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def reset(self) -> None:
+        self._next = 0
+
+    def route(self, ctx: RouterContext) -> np.ndarray:
+        out = np.empty(ctx.n_wait, dtype=np.int64)
+        for i in range(ctx.n_wait):
+            out[i] = self._next % ctx.R
+            self._next += 1
+        return out
+
+
+class LeastLoadedRouter(FleetRouter):
+    """Sequential argmin of committed load; each placement adds its
+    prefill size to the running estimate (ties: lowest index)."""
+
+    name = "least_loaded"
+
+    def route(self, ctx: RouterContext) -> np.ndarray:
+        out = np.empty(ctx.n_wait, dtype=np.int64)
+        loads = ctx.loads.astype(np.float64).copy()
+        for i in range(ctx.n_wait):
+            g = int(np.argmin(loads))
+            out[i] = g
+            loads[g] += float(ctx.wait_sizes[i])
+        return out
+
+
+class PowerOfDRouter(FleetRouter):
+    """Sample d replicas, route to the least-committed-count one —
+    size-agnostic like the engine-tier PowerOfDPolicy."""
+
+    name = "pod"
+
+    def __init__(self, d: int = 2) -> None:
+        self.d = int(d)
+        self.name = f"pod{d}"
+
+    def route(self, ctx: RouterContext) -> np.ndarray:
+        out = np.empty(ctx.n_wait, dtype=np.int64)
+        counts = ctx.counts.astype(np.int64).copy()
+        for i in range(ctx.n_wait):
+            d = min(self.d, ctx.R)
+            sample = ctx.rng.choice(ctx.R, size=d, replace=False)
+            g = int(sample[np.argmin(counts[sample])])
+            out[i] = g
+            counts[g] += 1
+        return out
+
+
+def _pad_bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two bucket >= n (bounds jit recompiles across the
+    varying per-step candidate counts)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class BFIORouter(FleetRouter):
+    """BF-IO at fleet scope (Algorithm 1, replicas as the machines).
+
+    One batched solve per routing step: base trajectories are each
+    replica's committed load grown by ``counts * drift`` over the
+    window, candidates contribute their prefill size plus drift, and
+    :func:`~repro.core.balancer_jax.bfio_assign_batch` (cluster axis 1)
+    returns the windowed-imbalance-minimizing total assignment.  Caps
+    are set to the candidate count — the fleet tier is total, capacity
+    is the replica scheduler's concern.
+    """
+
+    def __init__(self, H: int = 0, swap_iters: int = 8) -> None:
+        self.H = int(H)
+        self.swap_iters = int(swap_iters)
+        self.name = f"bfio_h{H}" if H else "bfio"
+
+    def _growth(self, ctx: RouterContext) -> np.ndarray:
+        g = np.zeros(self.H + 1)
+        for h in range(1, self.H + 1):
+            g[h] = g[h - 1] + ctx.drift.increment(ctx.k + h)
+        return g
+
+    def route(self, ctx: RouterContext) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from ..core.balancer_jax import bfio_assign_batch
+
+        n, R = ctx.n_wait, ctx.R
+        growth = self._growth(ctx)                       # (W,)
+        base = (ctx.loads[:, None]
+                + ctx.counts[:, None] * growth[None, :])  # (R, W)
+        npad = _pad_bucket(n)
+        cands = np.zeros((npad, self.H + 1))
+        cands[:n] = ctx.wait_sizes[:, None] + growth[None, :]
+        valid = np.zeros(npad, dtype=bool)
+        valid[:n] = True
+        a = bfio_assign_batch(
+            jnp.asarray(base, jnp.float32)[None],
+            jnp.full((1, R), npad, jnp.int32),
+            jnp.asarray(cands, jnp.float32)[None],
+            jnp.asarray(valid)[None],
+            jnp.asarray([n], jnp.int32),
+            swap_iters=self.swap_iters)
+        out = np.asarray(a)[0, :n].astype(np.int64)
+        if (out < 0).any():   # defensive: caps are ample, so never hit
+            fallback = LeastLoadedRouter().route(ctx)
+            out = np.where(out < 0, fallback, out)
+        return out
+
+
+def make_router(name, **kw) -> FleetRouter:
+    if isinstance(name, FleetRouter):
+        return name
+    name = name.lower()
+    if name in ("rr", "round_robin"):
+        return RoundRobinRouter()
+    if name in ("ll", "least_loaded"):
+        return LeastLoadedRouter()
+    if name.startswith("pod"):
+        d = int(name[3:]) if len(name) > 3 else kw.pop("d", 2)
+        return PowerOfDRouter(d=d)
+    if name.startswith("bfio"):
+        if "_h" in name:
+            kw.setdefault("H", int(name.split("_h")[1]))
+        return BFIORouter(**kw)
+    raise ValueError(f"unknown fleet router {name!r}")

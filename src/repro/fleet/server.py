@@ -1,0 +1,278 @@
+"""FleetServer: two-tier BF-IO serving across R engine replicas.
+
+The repo's :class:`~repro.serving.engine.ServingEngine` is one replica —
+G decode workers behind one admission scheduler.  The paper's scaling
+results (imbalance reduction *grows* with system scale, >52% energy in
+the G -> infinity limit) need the tier above: many replicas, heavy
+arrival streams, and a router spreading traffic across them.
+:class:`FleetServer` is that tier, runnable end to end:
+
+* R independent :class:`ServingEngine` replicas (shared params — one
+  compiled model serves every replica, as DP shards of one deployment),
+  each with its own slot table, KV backend, wait queue, and engine-tier
+  placement policy;
+* a barrier-stepped continuous loop: release due arrivals, route them
+  (:mod:`repro.fleet.router` — every waiting request is placed every
+  step), then step every busy replica once; the fleet clock advances by
+  the *slowest* replica's step (the barrier), and replicas that finish
+  early (or idle) draw idle power for the remainder — the fleet-tier
+  analogue of the per-worker barrier idle the paper's energy theorem
+  prices;
+* fleet-clock per-request bookkeeping (TTFT / TPOT / latency, terminal
+  ``status``/``error``) streamed into
+  :class:`~repro.fleet.telemetry.FleetTelemetry`.
+
+Failure isolation: a request the engine can never serve (decode growth
+past its whole pool, or a prompt rejected at submit) fails *that
+request* — surfaced on ``ServeRequest.status`` / ``.error`` and in the
+telemetry — while both the replica and the fleet keep serving.
+
+``fleet(R=1, router=*)`` is bit-identical to a bare engine on the same
+stream (the single replica sees the identical submission sequence), so
+every fleet run is anchored to the exhaustively-tested one-replica
+semantics; ``benchmarks/balancer_bench.py`` section ``fleet`` gates
+that parity plus the router-tier win (BF-IO vs round-robin) in CI.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Optional, Union
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import make_policy
+from ..core.metrics import step_imbalance
+from ..serving import EngineConfig, ServeRequest, ServingEngine
+from .router import FleetRouter, RouterContext, make_router
+from .telemetry import FleetTelemetry
+
+__all__ = ["FleetServer"]
+
+
+class FleetServer:
+    """Barrier-stepped fleet of engine replicas behind a router seam."""
+
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 *, n_replicas: int = 4,
+                 router: Union[str, FleetRouter] = "bfio",
+                 policy: str = "bfio_h0", mesh=None, drift=None,
+                 telemetry: Optional[FleetTelemetry] = None,
+                 seed: int = 0):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.R = int(n_replicas)
+        self.router = make_router(router)
+        self.engines = [
+            ServingEngine(cfg, params, engine_cfg, make_policy(policy),
+                          mesh=mesh, drift=drift)
+            for _ in range(self.R)
+        ]
+        self.ec = engine_cfg
+        self.telemetry = telemetry
+        self.rng = np.random.default_rng(seed)
+        self.t_now = 0.0
+        self.steps = 0
+        self.idle_j = 0.0            # barrier + between-arrival idle draw
+        self.imbalance_sum = 0.0
+        self.requests_failed = 0
+        # (arrival_time, seq, req) min-heap of not-yet-due submissions
+        # (seq breaks ties FIFO and keeps req out of the comparison)
+        self._pending: list[tuple[float, int, ServeRequest]] = []
+        self._seq = 0
+        # (arrival_time, req): due, not yet routed
+        self._queue: list[tuple[float, ServeRequest]] = []
+        self._live: list[dict] = []            # routed, not finalized
+        self.requests: list[ServeRequest] = []
+        self.assignments: dict[int, int] = {}  # rid -> replica
+
+    # ------------------------------------------------------------------
+    @property
+    def _idle_power(self) -> float:
+        """Idle draw of ONE replica (all its workers at u=0)."""
+        return float(self.ec.power.power(0.0)) * self.ec.n_workers
+
+    def submit(self, req: ServeRequest, arrival_time: float = 0.0) -> None:
+        """Queue a request for release at ``arrival_time`` on the fleet
+        clock (0 = immediately)."""
+        self.requests.append(req)
+        heapq.heappush(self._pending,
+                       (float(arrival_time), self._seq, req))
+        self._seq += 1
+
+    def submit_scenario(self, scenario) -> None:
+        """Submit every request of a :class:`~repro.fleet.workloads.
+        Scenario` at its arrival time."""
+        for fr in scenario.requests:
+            self.submit(fr.to_serve_request(), fr.arrival_time)
+
+    # ------------------------------------------------------------------
+    def _release_arrivals(self) -> None:
+        while self._pending and self._pending[0][0] <= self.t_now:
+            t, _, req = heapq.heappop(self._pending)
+            self._queue.append((t, req))
+
+    def _committed(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(loads, counts, free_slots) per replica; committed = resident
+        + queued-at-replica (see RouterContext)."""
+        loads = np.zeros(self.R)
+        counts = np.zeros(self.R, dtype=np.int64)
+        free = np.zeros(self.R, dtype=np.int64)
+        for r, eng in enumerate(self.engines):
+            active = int(eng.table.active.sum())
+            loads[r] = float(eng._loads().sum()) \
+                + sum(eng._req_cost(w) for w in eng.wait)
+            counts[r] = active + len(eng.wait)
+            free[r] = eng.N - active
+        return loads, counts, free
+
+    def _route(self) -> None:
+        if not self._queue:
+            return
+        loads, counts, free = self._committed()
+        ctx = RouterContext(
+            k=self.steps, loads=loads, counts=counts, free_slots=free,
+            wait_sizes=np.array([float(len(r.tokens))
+                                 for _, r in self._queue]),
+            drift=self.engines[0].drift, rng=self.rng)
+        assign = np.asarray(self.router.route(ctx))
+        if assign.shape != (len(self._queue),) or (assign < 0).any() \
+                or (assign >= self.R).any():
+            raise ValueError(
+                f"router {self.router.name!r} returned an invalid "
+                f"assignment (shape {assign.shape}, range "
+                f"[{assign.min() if assign.size else 0}, "
+                f"{assign.max() if assign.size else 0}]) for "
+                f"{len(self._queue)} candidates over {self.R} replicas")
+        for (t_arrival, req), g in zip(self._queue, assign):
+            g = int(g)
+            self.assignments[req.rid] = g
+            rec = {"rid": req.rid, "req": req, "replica": g,
+                   "t_arrival": t_arrival, "t_routed": self.t_now,
+                   "ttft": None}
+            try:
+                self.engines[g].submit(req)
+            except ValueError as e:     # e.g. prompt can never fit the pool
+                req.error = str(e)
+                req.status = "failed"
+                req.t_finish = self.t_now
+            self._live.append(rec)
+        self._queue = []
+
+    def _finalize_requests(self) -> None:
+        """Fleet-clock request bookkeeping after a barrier step."""
+        still = []
+        for rec in self._live:
+            req = rec["req"]
+            if rec["ttft"] is None and not np.isnan(req.t_first_token):
+                rec["ttft"] = self.t_now - rec["t_arrival"]
+            if req.done:
+                if req.failed:
+                    self.requests_failed += 1
+                latency = self.t_now - rec["t_arrival"]
+                n_gen = len(req.generated)
+                tpot = None
+                if rec["ttft"] is not None and n_gen > 1:
+                    tpot = (latency - rec["ttft"]) / (n_gen - 1)
+                if self.telemetry is not None:
+                    self.telemetry.record_request(
+                        rid=req.rid, replica=rec["replica"],
+                        status=req.status, error=req.error,
+                        t_arrival=rec["t_arrival"],
+                        t_routed=rec["t_routed"], ttft=rec["ttft"],
+                        tpot=tpot, latency=latency,
+                        n_prompt=len(req.tokens), n_generated=n_gen)
+            else:
+                still.append(rec)
+        self._live = still
+
+    def _busy(self, eng: ServingEngine) -> bool:
+        return bool(eng.wait) or bool(eng.table.active.any())
+
+    def step(self) -> dict:
+        """One fleet barrier step: release due arrivals, route, step
+        every busy replica, advance the fleet clock by the slowest
+        replica's step and charge idle power for the slack."""
+        self._release_arrivals()
+        self._route()
+        loads = np.array([float(e._loads().sum()) for e in self.engines])
+        imb = step_imbalance(loads)
+        dts = np.zeros(self.R)
+        de = np.zeros(self.R)
+        tokens0 = sum(e.tokens_out for e in self.engines)
+        any_busy = False
+        for r, eng in enumerate(self.engines):
+            if not self._busy(eng):
+                continue
+            any_busy = True
+            t0, e0 = eng.t_now, eng.energy_j
+            eng.step()
+            dts[r] = eng.t_now - t0
+            de[r] = eng.energy_j - e0
+        if any_busy:
+            dt = float(dts.max())
+            self.imbalance_sum += imb
+        else:
+            # fleet idle: fast-forward to the next arrival
+            imb = 0.0
+            dt = max(self._pending[0][0] - self.t_now, 0.0) \
+                if self._pending else 0.0
+            dts[:] = dt     # every replica idles the whole gap
+        idle = float(((dt - dts) * self._idle_power).sum())
+        if not any_busy:
+            idle = dt * self._idle_power * self.R
+        self.idle_j += idle
+        self.t_now += dt
+        self.steps += 1
+        self._finalize_requests()
+        tokens = sum(e.tokens_out for e in self.engines) - tokens0
+        if self.telemetry is not None:
+            self.telemetry.record_step(
+                step=self.steps, t=self.t_now, dt=dt,
+                replica_loads=loads,
+                replica_active=[int(e.table.active.sum())
+                                for e in self.engines],
+                replica_waiting=[len(e.wait) for e in self.engines],
+                cross_imbalance=imb, energy_j=float(de.sum()),
+                idle_j=idle, tokens=tokens,
+                preemptions=sum(e.preemptions for e in self.engines),
+                prefix_hits=sum(e.stats()["prefix_hits"]
+                                for e in self.engines))
+        return {"t": self.t_now, "dt": dt, "imbalance": imb,
+                "tokens": tokens, "idle_j": idle,
+                "waiting": len(self._queue) + len(self._pending)}
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Step until every submitted request reaches a terminal state."""
+        while (self._pending or self._queue
+               or any(self._busy(e) for e in self.engines)):
+            if self.steps >= max_steps:
+                raise RuntimeError("fleet exceeded max_steps")
+            self.step()
+        return self.stats()
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        rep = [e.stats() for e in self.engines]
+        tokens = sum(r["tokens"] for r in rep)
+        engine_j = sum(r["energy_j"] for r in rep)
+        energy = engine_j + self.idle_j
+        return {
+            "router": self.router.name,
+            "n_replicas": self.R,
+            "steps": self.steps,
+            "time_s": self.t_now,
+            "tokens": tokens,
+            "throughput_tok_s": tokens / max(self.t_now, 1e-12),
+            "engine_energy_j": engine_j,
+            "idle_j": self.idle_j,
+            "energy_j": energy,
+            "energy_per_token": energy / max(tokens, 1),
+            "avg_cross_imbalance": self.imbalance_sum / max(self.steps, 1),
+            "completed": sum(1 for r in self.requests
+                             if r.status == "done"),
+            "failed": self.requests_failed,
+            "preemptions": sum(r["preemptions"] for r in rep),
+            "prefix_hits": sum(r["prefix_hits"] for r in rep),
+            "replicas": rep,
+        }

@@ -1,0 +1,168 @@
+"""Fleet telemetry: structured per-step and per-request metrics with
+JSONL export.
+
+:class:`FleetTelemetry` is the observability seam of the fleet layer —
+:class:`~repro.fleet.server.FleetServer` feeds it one record per barrier
+step (per-replica loads, cross-replica imbalance, energy split into
+serving vs barrier-idle, token counts, preemption/prefix counters) and
+one record per finished request (fleet-clock TTFT / TPOT / end-to-end
+latency, terminal status, error text), and :meth:`summary` folds them
+into the serving scorecard: latency percentiles, SLO attainment,
+energy-per-token, mean imbalance.
+
+Export is line-delimited JSON (one self-describing record per line,
+``kind`` in {``meta``, ``step``, ``request``, ``summary``}) so a run can
+be streamed to disk while serving and post-processed with standard
+tooling; :meth:`read_jsonl` round-trips a file back into an equivalent
+telemetry object (gated by ``tests/test_fleet.py``).  The ``fleet``
+section of ``benchmarks/balancer_bench.py`` consumes these summaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SLOSpec", "FleetTelemetry", "percentiles"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Per-request service-level objective: a request attains the SLO
+    when its TTFT and its TPOT are both within bounds (failed requests
+    never attain)."""
+
+    ttft_s: float = 1.0
+    tpot_s: float = 0.1
+
+
+def percentiles(xs, ps=(50, 95, 99)) -> dict:
+    """{"p50": ..., "p95": ...} over finite entries (None when empty —
+    JSON-native, and round-trip comparable where NaN would not be)."""
+    xs = np.asarray([x for x in xs if x is not None], dtype=np.float64)
+    xs = xs[np.isfinite(xs)]
+    if xs.size == 0:
+        return {f"p{p}": None for p in ps}
+    return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+
+
+def _jsonify(x):
+    """Recursively coerce numpy scalars/arrays into JSON-native types."""
+    if isinstance(x, dict):
+        return {k: _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return [_jsonify(v) for v in x.tolist()]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    return x
+
+
+class FleetTelemetry:
+    """Collects step/request records; summarizes; round-trips JSONL."""
+
+    STEP_KEYS = ("step", "t", "dt", "replica_loads", "replica_active",
+                 "replica_waiting", "cross_imbalance", "energy_j",
+                 "idle_j", "tokens", "preemptions", "prefix_hits")
+    REQUEST_KEYS = ("rid", "replica", "status", "error", "t_arrival",
+                    "t_routed", "ttft", "tpot", "latency", "n_prompt",
+                    "n_generated")
+
+    def __init__(self, slo: Optional[SLOSpec] = None,
+                 record_steps: bool = True):
+        self.slo = slo or SLOSpec()
+        self.record_steps = record_steps
+        self.steps: list[dict] = []
+        self.requests: list[dict] = []
+
+    # -- ingestion ------------------------------------------------------
+    def record_step(self, **kw) -> None:
+        if not self.record_steps:
+            return
+        rec = {k: _jsonify(kw.get(k)) for k in self.STEP_KEYS}
+        self.steps.append(rec)
+
+    def record_request(self, **kw) -> None:
+        rec = {k: _jsonify(kw.get(k)) for k in self.REQUEST_KEYS}
+        self.requests.append(rec)
+
+    # -- aggregation ----------------------------------------------------
+    def summary(self) -> dict:
+        reqs = self.requests
+        done = [r for r in reqs if r["status"] == "done"]
+        failed = [r for r in reqs if r["status"] == "failed"]
+        tokens = sum(s["tokens"] for s in self.steps) if self.steps \
+            else sum(r["n_generated"] or 0 for r in done)
+        energy = sum(s["energy_j"] + s["idle_j"] for s in self.steps)
+        imb = [s["cross_imbalance"] for s in self.steps]
+        attained = [
+            r for r in done
+            if r["ttft"] is not None and r["ttft"] <= self.slo.ttft_s
+            and (r["tpot"] is None or r["tpot"] <= self.slo.tpot_s)
+        ]
+        out = {
+            "n_requests": len(reqs),
+            "completed": len(done),
+            "failed": len(failed),
+            "steps": len(self.steps),
+            "time_s": self.steps[-1]["t"] if self.steps else 0.0,
+            "tokens": tokens,
+            "energy_j": energy,
+            "energy_per_token": energy / max(tokens, 1),
+            "mean_cross_imbalance": float(np.mean(imb)) if imb else 0.0,
+            "slo_attainment": len(attained) / max(len(reqs), 1),
+            "slo": dataclasses.asdict(self.slo),
+            "preemptions": (self.steps[-1]["preemptions"]
+                            if self.steps else 0),
+            "prefix_hits": (self.steps[-1]["prefix_hits"]
+                            if self.steps else 0),
+        }
+        for key in ("ttft", "tpot", "latency"):
+            out[key] = percentiles([r[key] for r in done])
+        return _jsonify(out)
+
+    # -- JSONL export / import -----------------------------------------
+    def write_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(json.dumps(
+                {"kind": "meta", "slo": dataclasses.asdict(self.slo),
+                 "record_steps": self.record_steps}) + "\n")
+            for s in self.steps:
+                f.write(json.dumps({"kind": "step", **s}) + "\n")
+            for r in self.requests:
+                f.write(json.dumps({"kind": "request", **r}) + "\n")
+            f.write(json.dumps({"kind": "summary",
+                                **self.summary()}) + "\n")
+
+    @classmethod
+    def read_jsonl(cls, path: str) -> "FleetTelemetry":
+        """Rebuild a telemetry object from a JSONL export; the trailing
+        summary line is validated against the recomputed summary."""
+        tel: Optional[FleetTelemetry] = None
+        summary = None
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                kind = rec.pop("kind")
+                if kind == "meta":
+                    tel = cls(slo=SLOSpec(**rec["slo"]),
+                              record_steps=rec["record_steps"])
+                elif kind == "step":
+                    tel.steps.append(rec)
+                elif kind == "request":
+                    tel.requests.append(rec)
+                elif kind == "summary":
+                    summary = rec
+        if tel is None:
+            raise ValueError(f"{path}: no meta record")
+        if summary is not None:
+            recomputed = json.loads(json.dumps(tel.summary()))
+            if recomputed != summary:
+                raise ValueError(
+                    f"{path}: stored summary does not match records")
+        return tel

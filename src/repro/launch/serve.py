@@ -1,6 +1,14 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --policy
 bfio_h20`` — drives the BF-IO-routed multi-worker engine end to end.
 
+Fleet mode (``--replicas R`` with R > 1, or ``--scenario``): drives R
+engine replicas behind a fleet router (``--router round_robin |
+least_loaded | pod2 | bfio``) on a named scenario trace (``--scenario
+steady | flash_crowd | diurnal | agentic | long_doc``; omitted = the
+same synthetic stream as single-engine mode, all arriving at t=0).
+``--telemetry-out run.jsonl`` streams the telemetry subsystem's
+per-step / per-request records plus the summary to JSONL.
+
 Memory-pressure knobs (``--cache-backend paged`` only):
 
 * ``--pool-blocks N`` sizes the shared KV block pool below the
@@ -25,9 +33,61 @@ import numpy as np
 
 from ..configs import get_config, get_smoke_config
 from ..core import make_policy
+from ..fleet import FleetServer, FleetTelemetry, make_scenario
+from ..fleet.workloads import SCENARIOS as FLEET_SCENARIOS
 from ..models import init_params, split_params
 from ..serving import EngineConfig, ServeRequest, ServingEngine
 from .mesh import make_cpu_mesh, make_production_mesh
+
+
+def serve_fleet(args, cfg, params, engine_cfg, mesh) -> None:
+    """Fleet mode: R replicas behind the router, scenario arrivals,
+    telemetry export."""
+    telemetry = FleetTelemetry()
+    fleet = FleetServer(cfg, params, engine_cfg,
+                        n_replicas=args.replicas, router=args.router,
+                        policy=args.policy, mesh=mesh,
+                        telemetry=telemetry, seed=args.seed)
+    if args.scenario:
+        sc = make_scenario(
+            args.scenario, n_requests=args.requests,
+            n_replicas=args.replicas, n_workers=args.workers,
+            slots_per_worker=args.slots,
+            max_seq_len=engine_cfg.max_seq_len,
+            vocab_size=cfg.vocab_size, seed=args.seed)
+        fleet.submit_scenario(sc)
+    else:
+        rng = np.random.default_rng(args.seed)
+        for i in range(args.requests):
+            fleet.submit(ServeRequest(
+                rid=i,
+                tokens=rng.integers(1, cfg.vocab_size,
+                                    size=int(rng.integers(4, 64))),
+                max_new_tokens=args.max_new))
+    stats = fleet.run()
+    summary = telemetry.summary()
+    print(f"[fleet] {cfg.name} R={stats['n_replicas']} "
+          f"router={stats['router']} "
+          f"scenario={args.scenario or 'synthetic'}: "
+          f"{stats['tokens']} tokens in {stats['steps']} steps, "
+          f"{stats['throughput_tok_s']:.1f} tok/s, "
+          f"E={stats['energy_j']:.1f} J "
+          f"({stats['idle_j']:.1f} J barrier idle), "
+          f"{stats['energy_per_token']:.3f} J/tok, "
+          f"cross-replica imbalance {stats['avg_cross_imbalance']:.1f}")
+    def _s(x):     # percentiles are None when nothing completed
+        return "n/a" if x is None else f"{x:.3f}s"
+
+    print(f"[fleet] requests: {stats['completed']} done, "
+          f"{stats['failed']} failed; "
+          f"TTFT p95 {_s(summary['ttft']['p95'])}, "
+          f"latency p95 {_s(summary['latency']['p95'])}, "
+          f"SLO attainment {summary['slo_attainment']:.0%}")
+    if args.telemetry_out:
+        telemetry.write_jsonl(args.telemetry_out)
+        print(f"[fleet] telemetry -> {args.telemetry_out} "
+              f"({len(telemetry.steps)} step + "
+              f"{len(telemetry.requests)} request records)")
 
 
 def main() -> None:
@@ -65,6 +125,19 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share identical prompt-prefix KV blocks across "
                          "requests (paged backend, copy-on-write)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet mode: number of engine replicas behind "
+                         "the fleet router (1 = bare engine)")
+    ap.add_argument("--router", default="bfio",
+                    help="fleet router: round_robin | least_loaded | "
+                         "pod2 | bfio[_hH]")
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(FLEET_SCENARIOS),
+                    help="named scenario trace for fleet mode (timed "
+                         "arrivals); omitted = synthetic stream at t=0")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write fleet telemetry (per-step, per-request, "
+                         "summary) to this JSONL path")
     args = ap.parse_args()
 
     if args.smoke or jax.default_backend() == "cpu":
@@ -75,17 +148,20 @@ def main() -> None:
         mesh = make_production_mesh()
 
     params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
-    eng = ServingEngine(
-        cfg, params,
-        EngineConfig(n_workers=args.workers, slots_per_worker=args.slots,
-                     max_seq_len=256, cache_backend=args.cache_backend,
-                     prefill_chunk=args.prefill_chunk,
-                     prefill_budget=args.prefill_budget,
-                     paged_pool_blocks=args.pool_blocks,
-                     preemption_mode=args.preemption_mode,
-                     preemption_policy=args.preemption_policy,
-                     prefix_cache=args.prefix_cache),
-        make_policy(args.policy), mesh=mesh)
+    engine_cfg = EngineConfig(
+        n_workers=args.workers, slots_per_worker=args.slots,
+        max_seq_len=256, cache_backend=args.cache_backend,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget,
+        paged_pool_blocks=args.pool_blocks,
+        preemption_mode=args.preemption_mode,
+        preemption_policy=args.preemption_policy,
+        prefix_cache=args.prefix_cache)
+    if args.replicas > 1 or args.scenario or args.telemetry_out:
+        serve_fleet(args, cfg, params, engine_cfg, mesh)
+        return
+    eng = ServingEngine(cfg, params, engine_cfg,
+                        make_policy(args.policy), mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -430,6 +430,62 @@ class PagedCacheBackend(CacheBackend):
         self.kv.v_pool = self.kv.v_pool.at[:, blocks].set(
             vb[:, rows, blkpos].astype(dt))
 
+    def seed_chunk_prefix(self, slot: int, toks: np.ndarray) -> int:
+        """Chunked-admission prefix hit: pin the longest run of *full*
+        indexed blocks matching the prompt's leading content into
+        ``slot`` (``add_ref``, copy-free) and return the token count they
+        cover — the chunk job then starts at that offset, skipping
+        recompute of the hit prefix (a TTFT win on top of the memory
+        dedup).  Restricted to full blocks: chunk writes land directly in
+        pool blocks (no copy-on-write on the prefill path), so a shared
+        partial tail could be corrupted by the first chunk's scatter —
+        full blocks strictly before the chunk offset are never written.
+        At least the prompt's final token is always left uncovered so the
+        finishing chunk computes the logits the first sampled token needs
+        (generations stay bit-identical on dense models)."""
+        if self.prefix is None:
+            return 0
+        L = len(toks)
+        keys = self.prefix.keys_for(toks, self.block_size)
+        shared: list[int] = []
+        for key, parent, span in keys:
+            if len(span) < self.block_size:
+                break               # partial tail: never shared pre-write
+            blk = self.prefix.lookup(key, parent, span)
+            if blk is None or self.kv.allocator.ref_count(blk) <= 0:
+                break
+            shared.append(blk)
+        # keep the last prompt token out of the shared run (see above)
+        while shared and len(shared) * self.block_size >= L:
+            shared.pop()
+        self.prefix.queries += len(keys)
+        self.prefix.hits += len(shared)
+        if not shared:
+            return 0
+        for b in shared:
+            self.kv.allocator.add_ref(b)
+        self.kv.block_tables[slot, :] = -1
+        self.kv.block_tables[slot, :len(shared)] = shared
+        self.kv.req_blocks[slot] = list(shared)
+        covered = len(shared) * self.block_size
+        self.kv.lengths[slot] = covered
+        return covered
+
+    def register_chunk_prefix(self, slot: int, toks: np.ndarray) -> None:
+        """Index a chunk-prefilled prompt's blocks for later arrivals
+        (the synchronous path registers at :meth:`write_prefill`; chunked
+        jobs allocate lazily, so registration happens when the prompt
+        completes).  Includes the partial tail — a later *synchronous*
+        admission may share it (decode appends into it copy-on-write)."""
+        if self.prefix is None:
+            return
+        bl = self.kv.req_blocks.get(int(slot), [])
+        for j, (key, parent, span) in enumerate(
+                self.prefix.keys_for(toks, self.block_size)):
+            if j >= len(bl):
+                break
+            self.prefix.register(key, parent, span, bl[j])
+
     def prefill_chunk(self, toks, offs, clens, slots) -> np.ndarray:
         bs = self.block_size
         nb, C = toks.shape

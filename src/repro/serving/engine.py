@@ -90,6 +90,14 @@ class ServeRequest:
     t_submit: float = 0.0
     t_first_token: float = float("nan")
     t_finish: float = float("nan")
+    # per-request completion/error channel: "queued" -> "active" ->
+    # "done" | "failed" (a preempted request returns to "queued").  A
+    # failure (``error`` set) is terminal for THIS request only — the
+    # engine keeps serving the rest of the stream; callers (and the
+    # fleet router) read ``status``/``error`` instead of catching
+    # engine-wide exceptions.
+    status: str = "queued"
+    error: Optional[str] = None
     # set while the request sits preempted in the wait queue (swap-staged
     # KV or recompute bookkeeping, see serving/preemption.py); None once
     # (re-)admitted
@@ -98,6 +106,10 @@ class ServeRequest:
     @property
     def done(self) -> bool:
         return not np.isnan(self.t_finish)
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,8 +146,9 @@ class EngineConfig:
     preemption_policy: str = "lifo"
     # prefix caching (paged backend): share identical prompt-prefix KV
     # blocks across requests via a content-hash index, copy-on-write on
-    # the first divergent append.  Synchronous-prefill admissions only
-    # (chunked admissions allocate lazily and skip the index).
+    # the first divergent append.  Chunked admissions consult the index
+    # too: leading full-block hits are pinned copy-free and the chunk
+    # job starts past them, skipping recompute of the hit prefix.
     prefix_cache: bool = False
 
 
@@ -239,6 +252,7 @@ class ServingEngine:
         self.tokens_out = 0
         self.kv_peak_bytes = 0
         # memory-pressure accounting (paged backend)
+        self.requests_failed = 0
         self.preemptions = 0
         self.tokens_swapped = 0      # KV tokens staged host-side
         self.tokens_recomputed = 0   # KV tokens dropped for re-prefill
@@ -279,6 +293,7 @@ class ServingEngine:
                     f"(block_size={self.backend.block_size}) — it can "
                     "never be admitted")
         req.t_submit = self.t_now
+        req.status = "queued"
         self.scheduler.submit(req)
 
     def _worker_of(self, slot: int) -> int:
@@ -420,14 +435,18 @@ class ServingEngine:
         """Chunked admission: claim slots and register prefill jobs; no
         model work happens here — chunks run under the per-step budget.
         Recompute-on-resume requests re-prefill prompt + generated tokens
-        with their pending decode token carried on the job."""
+        with their pending decode token carried on the job.  With the
+        prefix cache on, a fresh prompt's leading full-block hits are
+        pinned copy-free and the job starts *past* them
+        (``CacheBackend.seed_chunk_prefix``) — the hit prefix is neither
+        re-stored nor recomputed."""
         workers = np.array([g for _, g in items], dtype=np.int64)
         slots = self.table.allocate(workers)
         for i, (r, g) in enumerate(items):
             slot = int(slots[i])
             r.worker, r.slot = g, slot
+            r.status = "active"
             self.slot_req[slot] = r
-            self.slot_load[slot] = 0.0
             self.slot_age[slot] = 0
             self.slot_max_new[slot] = r.max_new_tokens
             self.slot_eos[slot] = r.eos_id
@@ -435,12 +454,17 @@ class ServingEngine:
             self._admit_seq += 1
             toks = self._admit_tokens(r)
             resume_token = resume_length = None
+            done = 0
             if r.preempted is not None:
                 resume_token = int(r.preempted.next_token)
                 resume_length = int(r.preempted.length)
                 r.preempted = None
-            self.table.prefill_left[slot] = len(toks)
-            self.scheduler.register_job(slot, r, toks,
+            elif self._paged and self.backend.prefix is not None:
+                done = self.backend.seed_chunk_prefix(slot, toks)
+            self.slot_load[slot] = float(done)
+            self.table.prefill_left[slot] = len(toks) - done
+            self.scheduler.register_job(slot, r, toks, done=done,
+                                        seeded=done,
                                         resume_token=resume_token,
                                         resume_length=resume_length)
 
@@ -456,6 +480,7 @@ class ServingEngine:
             st = r.preempted
             self.backend.swap_in(slot, st)
             r.worker, r.slot = g, slot
+            r.status = "active"
             self.slot_req[slot] = r
             self.slot_max_new[slot] = r.max_new_tokens
             self.slot_eos[slot] = r.eos_id
@@ -519,7 +544,10 @@ class ServingEngine:
             r.preempted = state
         else:
             self.backend.discard(slot)
-            self.tokens_recomputed += job.done if job is not None else L
+            # seeded prefix tokens were pinned copy-free, never computed
+            # — dropping them forces no recompute
+            self.tokens_recomputed += (job.done - job.seeded) \
+                if job is not None else L
             if job is not None and job.resume_token is None:
                 r.preempted = None        # plain prompt: restart prefill
             elif job is not None:         # re-preempted mid-rebuild
@@ -533,8 +561,26 @@ class ServingEngine:
                     next_token=int(self.slot_tokens[slot]))
         self.slot_req[slot] = None
         self.table.release(np.asarray([slot]))
+        r.status = "queued"
         self.scheduler.requeue(r)
         self.preemptions += 1
+
+    def _fail_slot(self, slot: int, msg: str) -> None:
+        """Per-request failure channel: mark the request on ``slot``
+        failed (``status``/``error``), release its slot and KV, and keep
+        the rest of the stream serving.  The seed engine raised here and
+        killed the whole step; a fleet router needs the error surfaced
+        per request so one doomed request cannot take down its replica."""
+        r = self.slot_req[slot]
+        self.scheduler.drop_job(slot)
+        r.error = msg
+        r.status = "failed"
+        r.t_finish = self.t_now
+        r.preempted = None
+        self.slot_req[slot] = None
+        self.table.release(np.asarray([slot]))
+        self.backend.release(np.asarray([slot]))
+        self.requests_failed += 1
 
     def _ensure_decode_capacity(self) -> None:
         """Preempt until the pool can serve this step's decode growth
@@ -544,26 +590,32 @@ class ServingEngine:
         A slot already holding the *entire* pool that still needs to
         grow can never be served — preempting it would only requeue it
         into an identical dead end (admit, grow back, self-preempt,
-        repeat until ``max_steps``), so that case fails fast with the
-        seed's ``MemoryError`` instead of thrashing."""
+        repeat until ``max_steps``).  That request alone *fails*
+        (``status="failed"``, ``error`` set, KV released) and everything
+        else keeps serving — the seed raised ``MemoryError`` here and
+        killed the engine step."""
         kv = self.backend.kv
         while True:
             decode_idx = self.table.decode_indices()
             need = self.backend.decode_block_demand(decode_idx)
             if need <= self.backend.free_blocks:
                 return
+            failed_one = False
             for s in decode_idx:
                 s = int(s)
                 held = len(kv.req_blocks.get(s, []))
                 if (held + 1 > self.backend.n_blocks
                         and kv.append_demand(np.asarray([s])) > 0):
                     r = self.slot_req[s]
-                    raise MemoryError(
+                    self._fail_slot(s, (
                         f"request {r.rid}: resident KV ({held} blocks) "
                         f"plus one growth block exceeds the entire pool "
                         f"({self.backend.n_blocks} blocks) — preemption "
                         "cannot help; size the pool for at least one "
-                        "full request (prompt + max_new_tokens)")
+                        "full request (prompt + max_new_tokens)"))
+                    failed_one = True
+            if failed_one:
+                continue        # demand changed; re-evaluate before preempting
             if not self._preempt_one():
                 raise MemoryError(
                     f"KV pool exhausted with no preemptable victim: "
@@ -628,6 +680,11 @@ class ServingEngine:
                         # instead of restarting it at the cap
                         self.backend.kv.lengths[slot] = job.resume_length
                     continue
+                if self._paged and self.backend.prefix is not None:
+                    # index the finished prompt's blocks for later
+                    # arrivals (sync admissions register at write_prefill;
+                    # chunked jobs allocate lazily, so register here)
+                    self.backend.register_chunk_prefix(slot, job.tokens)
                 first = int(np.argmax(logits[j]))
                 self.slot_tokens[slot] = first
                 self.slot_age[slot] = 1
@@ -644,6 +701,7 @@ class ServingEngine:
         token completes at prefill instead of burning a decode step on a
         token past its budget."""
         r.t_finish = self.t_now
+        r.status = "done"
         self.slot_req[slot] = None
         self.table.release(np.asarray([slot]))
         self.backend.release(np.asarray([slot]))
@@ -711,6 +769,7 @@ class ServingEngine:
         for i, (r, g) in enumerate(items):
             slot = int(slots[i])
             r.worker, r.slot = g, slot
+            r.status = "active"
             if vec:
                 self.slot_req[slot] = r  # ref set it during the free scan
             self.slot_load[slot] = float(lens[i])
@@ -833,6 +892,7 @@ class ServingEngine:
             if (len(r.generated) >= r.max_new_tokens
                     or tok == r.eos_id):
                 r.t_finish = self.t_now
+                r.status = "done"
                 self.slot_req[s] = None
                 self.slot_load[s] = 0.0
                 self.table.active[s] = False
@@ -859,6 +919,7 @@ class ServingEngine:
             for s in done_idx:
                 r = self.slot_req[s]
                 r.t_finish = self.t_now
+                r.status = "done"
                 self.slot_req[s] = None
             self.table.release(done_idx)
             self.backend.release(done_idx)
@@ -883,6 +944,7 @@ class ServingEngine:
             "energy_j": self.energy_j,
             "avg_imbalance": self.imbalance_sum / max(self.steps, 1),
             "policy": self.policy.name,
+            "requests_failed": self.requests_failed,
             "preemptions": self.preemptions,
             "tokens_swapped": self.tokens_swapped,
             "tokens_recomputed": self.tokens_recomputed,

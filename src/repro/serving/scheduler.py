@@ -60,12 +60,16 @@ class PrefillJob:
     ``resume_length`` preserves the victim's KV length when it exceeded
     what the rebuilt (``max_seq_len``-truncated) token sequence covers —
     a request that decoded past the cap on frozen KV must keep its RoPE
-    position counter, not restart it at the cap.
+    position counter, not restart it at the cap.  ``seeded`` is the
+    prefix-cache hit offset the job started at (those tokens were pinned
+    copy-free, never computed — recompute accounting must not charge
+    them).
     """
 
     req: object                  # ServeRequest
     tokens: np.ndarray           # prompt (already truncated to max_seq_len)
     done: int = 0                # tokens prefilled so far
+    seeded: int = 0              # leading tokens covered by prefix hits
     resume_token: Optional[int] = None
     resume_length: Optional[int] = None
 
@@ -154,15 +158,17 @@ class Scheduler:
 
     # -- chunked prefill ------------------------------------------------
     def register_job(self, slot: int, req, tokens: np.ndarray, *,
-                     done: int = 0,
+                     done: int = 0, seeded: int = 0,
                      resume_token: Optional[int] = None,
                      resume_length: Optional[int] = None) -> None:
         """Track a mid-prefill request on ``slot``.  ``done`` resumes a
-        preempted-and-swapped-back job at its old offset;
-        ``resume_token``/``resume_length`` mark a recompute-on-resume
-        prefill (see :class:`PrefillJob`)."""
+        preempted-and-swapped-back job at its old offset; ``seeded``
+        marks how much of ``done`` came from prefix-cache pins rather
+        than compute; ``resume_token``/``resume_length`` mark a
+        recompute-on-resume prefill (see :class:`PrefillJob`)."""
         self._jobs[int(slot)] = PrefillJob(req=req, tokens=tokens,
                                            done=int(done),
+                                           seeded=int(seeded),
                                            resume_token=resume_token,
                                            resume_length=resume_length)
 

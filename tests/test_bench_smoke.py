@@ -18,13 +18,35 @@ def test_smoke_schema_and_finite_timings():
     check(doc2)
     sections = {r["section"] for r in doc2["rows"]}
     assert sections == {"solver", "simulator", "batch", "engine",
-                        "engine_paged", "engine_preempt"}
+                        "engine_paged", "engine_preempt", "fleet"}
     kinds = {r.get("kind") for r in doc2["rows"]
              if r["section"] == "engine_paged"}
     assert kinds == {"grid", "stall"}
     preempt_kinds = {r.get("kind") for r in doc2["rows"]
                      if r["section"] == "engine_preempt"}
     assert preempt_kinds == {"pressure", "prefix"}
+    fleet_kinds = {r.get("kind") for r in doc2["rows"]
+                   if r["section"] == "fleet"}
+    assert fleet_kinds == {"scenario", "parity"}
+
+
+def test_sections_filter():
+    """--sections runs (and the checker expects) only the named
+    sections — the knob that keeps targeted perf investigations fast."""
+    doc = run_smoke(sections=["batch"])
+    assert {r["section"] for r in doc["rows"]} == {"batch"}
+    assert doc["meta"]["sections"] == ["batch"]
+    # a filtered doc must not masquerade as a full one
+    doc["meta"]["sections"] = None
+    with pytest.raises(AssertionError):
+        check(doc)
+
+
+def test_sections_filter_rejects_unknown():
+    from benchmarks.balancer_bench import run
+
+    with pytest.raises(ValueError, match="unknown bench sections"):
+        run(smoke=True, sections=["no_such_section"])
 
 
 def test_check_rejects_broken_docs():

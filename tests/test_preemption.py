@@ -346,6 +346,17 @@ class TestEngineFuzz:
                 f"request {a.rid}: prefix-cache hit changed its output"
         _assert_drained(eng_b)
 
+        # chunked admissions consult the index too (full-block hits are
+        # pinned and the chunk job starts past them): generations still
+        # bit-identical, refcounts still drain
+        rc = _clone(proto)
+        eng_c, _ = _run(params, mesh, rc, G=G, B=B, cache_backend="paged",
+                        prefix_cache=True, prefill_chunk=8)
+        for a, c in zip(ra, rc):
+            assert a.generated == c.generated, \
+                f"request {a.rid}: chunked prefix hit changed its output"
+        _assert_drained(eng_c)
+
     @fuzz_seeds(2)
     def test_prefix_cache_under_pressure(self, setup, seed):
         """Sharing + swap preemption together: still bit-exact, still
@@ -369,6 +380,109 @@ class TestEngineFuzz:
         for a, b in zip(ra, rb):
             assert a.generated == b.generated
         _assert_drained(eng_b)
+
+
+class TestChunkedPrefix:
+    """Chunked-prefill admissions consulting the PrefixIndex (ROADMAP
+    open item): full-block hits share the KV copy-free AND skip
+    recompute of the hit prefix — a TTFT win, gens bit-identical."""
+
+    def _shared_reqs(self, n=6, shared_len=40, sfx=4, seed=5):
+        """Shared-system-prefix stream with one long-running holder:
+        the index is admission-scoped (eager eviction when the last
+        holder frees), so rid 0 decodes long enough that later waves
+        admit while its registered prompt blocks are still resident."""
+        rng = np.random.default_rng(seed)
+        system = rng.integers(1, 128, size=shared_len)
+        return [ServeRequest(
+            rid=i,
+            tokens=np.concatenate(
+                [system, rng.integers(1, 128, size=sfx)]),
+            max_new_tokens=24 if i == 0 else 4) for i in range(n)]
+
+    def _run_counting(self, params, mesh, reqs, **ec_kw):
+        """Like _run but also sums per-step chunk-prefill tokens."""
+        eng = ServingEngine(
+            CFG, params,
+            EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=64,
+                         cache_backend="paged", prefill_chunk=8, **ec_kw),
+            make_policy("fcfs"), mesh=mesh)
+        for r in reqs:
+            eng.submit(r)
+        prefill_tokens = 0
+        while eng.wait or eng.table.active.any():
+            prefill_tokens += eng.step()["prefill_tokens"]
+        return eng, prefill_tokens
+
+    def test_hits_skip_recompute(self, setup):
+        params, mesh = setup
+        proto = self._shared_reqs()
+        oracle = _clone(proto)
+        _run(params, mesh, oracle, G=1, B=2, cache_backend="slot")
+
+        off = _clone(proto)
+        _, toks_off = self._run_counting(params, mesh, off)
+        on = _clone(proto)
+        eng, toks_on = self._run_counting(params, mesh, on,
+                                          prefix_cache=True)
+        stats = eng.stats()
+        assert stats["prefix_hits"] > 0, "chunked admissions never hit"
+        # the TTFT win: hit prefixes are not re-prefilled, so the total
+        # chunk-prefill volume strictly drops (2 full blocks per hit)
+        assert toks_on < toks_off, (toks_on, toks_off)
+        for a, b, c in zip(oracle, off, on):
+            assert a.generated == b.generated == c.generated
+        _assert_drained(eng)
+
+    def test_recompute_accounting_excludes_seeded_tokens(self, setup):
+        """Prefix-pinned tokens were never computed, so recompute-
+        preempting a seeded mid-prefill job must not charge them to
+        ``tokens_recomputed``."""
+        params, mesh = setup
+        reqs = self._shared_reqs(n=2)
+        eng = ServingEngine(
+            CFG, params,
+            EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=64,
+                         cache_backend="paged", prefill_chunk=8,
+                         prefix_cache=True, preemption_mode="recompute"),
+            make_policy("fcfs"), mesh=mesh)
+        eng.submit(reqs[0])
+        eng.step()                       # admit the holder
+        while eng.scheduler.n_prefilling:
+            eng.step()                   # finish + register its prompt
+        eng.submit(reqs[1])
+        eng.step()                       # admit: seeds 2 full blocks
+        slot = reqs[1].slot
+        job = eng.scheduler.job(slot)
+        assert job is not None and job.seeded == 32
+        assert job.done > job.seeded     # one chunk already ran
+        expected = job.done - job.seeded
+        before = eng.tokens_recomputed
+        eng._preempt_slot(slot)
+        assert eng.tokens_recomputed - before == expected
+        stats = eng.run()                # requeued victim still finishes
+        assert all(r.done and not r.failed for r in reqs)
+        assert stats["preemptions"] == 1
+
+    def test_full_cover_hit_leaves_final_token_computed(self, setup):
+        """A prompt whose *every* block is indexed (exact multiple of
+        the block size, seen before) must still compute its final
+        position — the shared run is capped so the finishing chunk
+        produces the logits the first token is sampled from."""
+        params, mesh = setup
+        rng = np.random.default_rng(9)
+        prompt = rng.integers(1, 128, size=32)       # exactly 2 blocks
+        proto = [ServeRequest(rid=i, tokens=prompt.copy(),
+                              max_new_tokens=24 if i == 0 else 4)
+                 for i in range(4)]
+        oracle = _clone(proto)
+        _run(params, mesh, oracle, G=1, B=2, cache_backend="slot")
+        on = _clone(proto)
+        eng, _ = self._run_counting(params, mesh, on, prefix_cache=True)
+        assert eng.stats()["prefix_hits"] > 0
+        for a, c in zip(oracle, on):
+            assert a.generated == c.generated
+        _assert_drained(eng)
 
 
 class TestPressureDeterministic:
@@ -424,24 +538,35 @@ class TestPressureDeterministic:
         # (70) plus the finish step's decode append must be restored
         assert int(eng.backend.kv.lengths[r.slot]) == 71
 
-    def test_growth_past_whole_pool_fails_fast(self, setup):
+    def test_growth_past_whole_pool_fails_that_request_only(self, setup):
         """A request whose decode growth exceeds the entire pool cannot
-        be saved by preemption — it must fail with the seed's
-        MemoryError immediately, not thrash admit/self-preempt cycles
-        until max_steps."""
+        be saved by preemption — it fails *alone* (per-request
+        status/error channel) and the rest of the stream keeps serving;
+        the seed raised MemoryError here and killed the engine step."""
         params, mesh = setup
-        r = ServeRequest(rid=0, tokens=np.arange(1, 61),  # 4 blocks: fits
-                         max_new_tokens=20)               # growth: doesn't
+        doomed = ServeRequest(rid=0, tokens=np.arange(1, 61),  # 4 blocks: fit
+                              max_new_tokens=20)               # growth: no
+        ok = ServeRequest(rid=1, tokens=np.arange(1, 9),
+                          max_new_tokens=4)
         eng = ServingEngine(
             CFG, params,
             EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=256,
                          cache_backend="paged", paged_block_size=16,
                          paged_pool_blocks=4, preemption_mode="swap"),
             make_policy("fcfs"), mesh=mesh)
-        eng.submit(r)
-        with pytest.raises(MemoryError, match="exceeds the entire pool"):
-            eng.run(max_steps=20_000)
-        assert eng.preemptions <= 1      # no thrash loop before failing
+        eng.submit(doomed)
+        eng.submit(ok)
+        stats = eng.run(max_steps=20_000)    # must NOT raise
+        assert doomed.status == "failed" and doomed.failed
+        assert "exceeds the entire pool" in doomed.error
+        assert doomed.done                   # terminal: t_finish is set
+        assert eng.preemptions <= 1          # no thrash loop before failing
+        assert stats["requests_failed"] == 1
+        # the doomed request's blocks were released and the small request
+        # completed untouched
+        assert ok.status == "done" and ok.error is None
+        assert len(ok.generated) == 4
+        assert eng.backend.free_blocks == eng.backend.n_blocks
 
     def test_oversized_prompt_rejected_at_submit(self, setup):
         """Regression: a prompt that can never fit the pool used to
