@@ -40,6 +40,17 @@ precisely for this):
   imbalance and energy-per-token on >= 3 of the 5 scenarios.  The
   ``kind="parity"`` row anchors the layer: ``fleet(R=1, router=*)``
   stats are bit-identical to a bare ServingEngine on the same stream.
+* **fleet_scale** — the vectorized fleet hot path.  ``kind="speedup"``
+  rows time the same trickle stream (sparse arrivals over mostly-idle
+  replicas — the regime where fleet bookkeeping dominates) through the
+  same router under ``fleet_mode="ref"`` (the original per-step O(R)
+  re-gather loops, kept in-tree) vs ``"vec"`` (incrementally-updated
+  per-replica arrays), with stats and per-step telemetry checked
+  bit-identical.  The CI gate on the full grid: vec >= 5x ref steps/s
+  at R=64 on at least one router.  The ``kind="pod"`` row runs
+  R-in-the-hundreds with two-level hierarchical ``pod_bfio`` routing
+  (one batched solve over all pods) vs flat round_robin: it must
+  complete with zero failures and lower mean cross-replica imbalance.
 * **engine_preempt** — the memory-pressure subsystem.  ``kind=
   "pressure"`` rows: the same request stream through a pool sized at
   ``pool_frac`` (0.5) of the unconstrained peak-resident demand, once per
@@ -428,7 +439,6 @@ def _fleet_case(R: int, G: int, B: int, *, n_requests: int,
     """Scenario sweep: every named fleet scenario once per router, all
     metrics read from the telemetry subsystem."""
     from repro.fleet import (
-        SCENARIOS,
         FleetServer,
         FleetTelemetry,
         SLOSpec,
@@ -440,7 +450,9 @@ def _fleet_case(R: int, G: int, B: int, *, n_requests: int,
     ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
                      **FLEET_TIMING)
     rows = []
-    for name in SCENARIOS:
+    # the five routing scenarios; "trickle" belongs to fleet_scale
+    for name in ("steady", "flash_crowd", "diurnal", "agentic",
+                 "long_doc"):
         sc = make_scenario(name, n_requests=n_requests, n_replicas=R,
                            n_workers=G, slots_per_worker=B, max_seq_len=64,
                            vocab_size=128, seed=seed,
@@ -508,6 +520,155 @@ def _fleet_parity_case(G: int, B: int, *, n_rounds: float = 1.5,
             "n_requests": int(G * B * n_rounds),
             "routers": list(routers), "steps": bare["steps"],
             "stats_equal": equal}
+
+
+_FLEET_SCALE_STATE: dict = {}
+
+
+def _fleet_scale_setup():
+    """An even smaller model than bench-tiny (1 layer, d=32): the
+    fleet_scale section measures fleet-layer bookkeeping at large R,
+    so per-replica model compute is pinned near the floor a CPU jit
+    round-trip allows."""
+    if _FLEET_SCALE_STATE:
+        return _FLEET_SCALE_STATE
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.models import init_params, split_params
+
+    cfg = ModelConfig(name="bench-fleet", family="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab_size=128, dtype="float32")
+    params, _ = split_params(init_params(cfg, jax.random.PRNGKey(0)))
+    _FLEET_SCALE_STATE.update(cfg=cfg, params=params,
+                              mesh=make_cpu_mesh())
+    return _FLEET_SCALE_STATE
+
+
+def _fleet_scale_server(st, ec, sc, *, R, router, mode, telemetry=None):
+    from repro.fleet import FleetServer
+
+    fs = FleetServer(st["cfg"], st["params"], ec, n_replicas=R,
+                     router=router, policy="bfio_h0", mesh=st["mesh"],
+                     fleet_mode=mode, telemetry=telemetry)
+    fs.submit_scenario(sc)
+    return fs
+
+
+def _fleet_scale_speedup_case(R: int, G: int, B: int, *, n_requests: int,
+                              routers, load_factor: float = 0.1,
+                              repeats: int = 2,
+                              seed: int = 0) -> list[dict]:
+    """Ref-vs-vec fleet hot path on the trickle scenario: the same
+    stream through the same router under both fleet modes.  Timed runs
+    carry no telemetry and take the min wall over ``repeats`` with the
+    GC parked (the stall-case idiom); stats equality is checked on the
+    timed runs and per-step telemetry equality on a separate
+    instrumented pair."""
+    import gc
+
+    from repro.fleet import FleetTelemetry, make_scenario
+    from repro.serving import EngineConfig
+
+    st = _fleet_scale_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=48,
+                      prefill_chunk=16, **FLEET_TIMING)
+    sc = make_scenario("trickle", n_requests=n_requests, n_replicas=R,
+                       n_workers=G, slots_per_worker=B, max_seq_len=48,
+                       vocab_size=128, seed=seed,
+                       load_factor=load_factor, **FLEET_TIMING)
+    rows = []
+    for router in routers:
+        # warmup: compile every shape bucket the stream hits
+        _fleet_scale_server(st, ec, sc, R=R, router=router,
+                            mode="vec").run(max_steps=500_000)
+        walls = {}
+        stats = {}
+        for mode in ("ref", "vec"):
+            best = float("inf")
+            for _ in range(repeats):
+                fs = _fleet_scale_server(st, ec, sc, R=R, router=router,
+                                         mode=mode)
+                gc.collect()
+                gc.disable()
+                try:
+                    t0 = time.perf_counter()
+                    stats[mode] = fs.run(max_steps=500_000)
+                    best = min(best, time.perf_counter() - t0)
+                finally:
+                    gc.enable()
+            walls[mode] = best
+        tel = {}
+        for mode in ("ref", "vec"):
+            tel[mode] = FleetTelemetry()
+            _fleet_scale_server(st, ec, sc, R=R, router=router, mode=mode,
+                                telemetry=tel[mode]).run(max_steps=500_000)
+        steps = stats["vec"]["steps"]
+        rows.append({
+            "section": "fleet_scale", "kind": "speedup",
+            "scenario": "trickle", "R": R, "G": G, "B": B,
+            "router": router, "n_requests": sc.n_requests,
+            "load_factor": load_factor, "repeats": repeats,
+            "steps": steps,
+            "ref_wall_s": walls["ref"], "vec_wall_s": walls["vec"],
+            "ref_steps_per_s": steps / max(walls["ref"], 1e-9),
+            "vec_steps_per_s": steps / max(walls["vec"], 1e-9),
+            "speedup": walls["ref"] / max(walls["vec"], 1e-9),
+            "stats_equal": stats["ref"] == stats["vec"],
+            "telemetry_equal": (
+                tel["ref"].steps == tel["vec"].steps
+                and tel["ref"].requests == tel["vec"].requests
+                and tel["ref"].summary() == tel["vec"].summary()),
+            "completed": stats["vec"]["completed"],
+            "failed": stats["vec"]["failed"]})
+    return rows
+
+
+def _fleet_scale_pod_case(R: int, G: int, B: int, *, pods: int,
+                          n_requests: int, load_factor: float = 0.8,
+                          seed: int = 0,
+                          jsonl_dir: str | None = None) -> dict:
+    """Hierarchical pod routing at large R (both vec mode): flat
+    round_robin vs two-level ``pod_bfio`` on the steady scenario —
+    the R-in-the-hundreds deployment shape."""
+    from repro.fleet import FleetTelemetry, SLOSpec, make_scenario
+    from repro.serving import EngineConfig
+
+    st = _fleet_scale_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                      prefill_chunk=16, **FLEET_TIMING)
+    sc = make_scenario("steady", n_requests=n_requests, n_replicas=R,
+                       n_workers=G, slots_per_worker=B, max_seq_len=64,
+                       vocab_size=128, seed=seed,
+                       load_factor=load_factor, **FLEET_TIMING)
+    row = {"section": "fleet_scale", "kind": "pod", "scenario": "steady",
+           "R": R, "G": G, "B": B, "pods": pods,
+           "n_requests": sc.n_requests, "load_factor": load_factor}
+    pod_router = f"pod_bfio_p{pods}"
+    for router in ("round_robin", pod_router):
+        key = "pod_bfio" if router == pod_router else router
+        tel = FleetTelemetry(slo=SLOSpec(ttft_s=1.0, tpot_s=0.05))
+        fs = _fleet_scale_server(st, ec, sc, R=R, router=router,
+                                 mode="vec", telemetry=tel)
+        t0 = time.perf_counter()
+        stats = fs.run(max_steps=500_000)
+        wall = time.perf_counter() - t0
+        s = tel.summary()
+        row[f"{key}_imbalance"] = s["mean_cross_imbalance"]
+        row[f"{key}_energy_per_token"] = s["energy_per_token"]
+        row[f"{key}_completed"] = s["completed"]
+        row[f"{key}_failed"] = s["failed"]
+        row[f"{key}_steps"] = stats["steps"]
+        row[f"{key}_wall_s"] = wall
+        row[f"{key}_steps_per_s"] = stats["steps"] / max(wall, 1e-9)
+        if jsonl_dir is not None and router == pod_router:
+            tel.write_jsonl(os.path.join(
+                jsonl_dir, f"fleet_scale_pod_R{R}.jsonl"))
+    row["pod_wins"] = bool(row["pod_bfio_imbalance"]
+                           < row["round_robin_imbalance"])
+    return row
 
 
 _STALL_STATE: dict = {}
@@ -619,7 +780,7 @@ def _engine_stall_case(G: int, B: int, *, chunk: int = 8,
 
 
 ALL_SECTIONS = ("solver", "simulator", "batch", "engine", "engine_paged",
-                "engine_preempt", "fleet")
+                "engine_preempt", "fleet", "fleet_scale")
 
 
 def run(full: bool = False, smoke: bool = False,
@@ -645,6 +806,11 @@ def run(full: bool = False, smoke: bool = False,
         fleet_shape = (4, 2, 2)       # R, G, B
         fleet_kw = dict(n_requests=32, routers=("round_robin", "bfio"))
         fleet_parity_shape = (2, 2)
+        fscale_shape = (8, 1, 2)      # R, G, B
+        fscale_kw = dict(n_requests=24, repeats=1,
+                         routers=("round_robin", "bfio"))
+        fscale_pod_shape = (16, 1, 2)
+        fscale_pod_kw = dict(pods=4, n_requests=48)
         n_rounds, iters = 2.0, 2
     else:
         solver_grid = [(G, N) for G in (64, 256, 1024)
@@ -663,6 +829,14 @@ def run(full: bool = False, smoke: bool = False,
             routers=("round_robin", "least_loaded", "pod2", "bfio"),
             jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
         fleet_parity_shape = (2, 4)
+        fscale_shape = (64, 1, 2)
+        fscale_kw = dict(
+            n_requests=128, repeats=2,
+            routers=("round_robin", "least_loaded", "pod2", "bfio"))
+        fscale_pod_shape = (256, 1, 2)
+        fscale_pod_kw = dict(
+            pods=16, n_requests=384,
+            jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
         n_rounds, iters = 4.0, 10
 
     rows = []
@@ -749,6 +923,22 @@ def run(full: bool = False, smoke: bool = False,
               f"{len(r['routers'])} routers: "
               f"stats_equal={r['stats_equal']}  "
               f"(bfio wins {wins}/5 scenarios)", flush=True)
+    if "fleet_scale" in sections:
+        for r in _fleet_scale_speedup_case(*fscale_shape, **fscale_kw):
+            rows.append(r)
+            print(f"  fscale {r['router']:<13s} R={r['R']:<4d} "
+                  f"ref={r['ref_steps_per_s']:7.1f} "
+                  f"vec={r['vec_steps_per_s']:7.1f} steps/s "
+                  f"speedup={r['speedup']:5.2f}x "
+                  f"equal={r['stats_equal'] and r['telemetry_equal']}",
+                  flush=True)
+        r = _fleet_scale_pod_case(*fscale_pod_shape, **fscale_pod_kw)
+        rows.append(r)
+        print(f"  fscale pod R={r['R']} pods={r['pods']} "
+              f"imb rr={r['round_robin_imbalance']:7.1f} "
+              f"pod_bfio={r['pod_bfio_imbalance']:7.1f}  "
+              f"failed={r['pod_bfio_failed']}  win={r['pod_wins']}",
+              flush=True)
 
     doc = {
         "meta": {
@@ -767,7 +957,9 @@ def run(full: bool = False, smoke: bool = False,
                     "(engine_paged section) / preemption + prefix "
                     "caching under memory pressure (engine_preempt "
                     "section) / two-tier routing across engine replicas "
-                    "(fleet section)",
+                    "(fleet section) / vectorized fleet hot path "
+                    "(fleet_mode='vec') with hierarchical pod routing "
+                    "at R in the hundreds (fleet_scale section)",
         },
         "rows": rows,
     }

@@ -61,6 +61,23 @@ FLEET_PARITY_KEYS = {"G", "B", "n_requests", "routers", "steps",
 FLEET_SCENARIOS = {"steady", "flash_crowd", "diurnal", "agentic",
                    "long_doc"}
 FLEET_MIN_WINS = 3
+FSCALE_SPEEDUP_KEYS = {"scenario", "R", "G", "B", "router", "n_requests",
+                       "load_factor", "repeats", "steps", "ref_wall_s",
+                       "vec_wall_s", "ref_steps_per_s", "vec_steps_per_s",
+                       "speedup", "stats_equal", "telemetry_equal",
+                       "completed", "failed"}
+FSCALE_POD_KEYS = {"scenario", "R", "G", "B", "pods", "n_requests",
+                   "load_factor", "pod_wins"} | {
+    f"{r}_{m}" for r in ("round_robin", "pod_bfio")
+    for m in ("imbalance", "energy_per_token", "completed", "failed",
+              "steps", "wall_s", "steps_per_s")}
+# full-grid-only thresholds (wall-clock gates are meaningless on the
+# tiny smoke shapes): the vectorized hot path must pay at scale, and
+# the hierarchical pod run must both finish and beat flat round_robin
+FSCALE_MIN_R = 64           # the speedup grid must reach this R
+FSCALE_MIN_SPEEDUP = 5.0    # best router at R >= FSCALE_MIN_R
+FSCALE_MIN_EACH = 0.8       # no router may regress under vec
+FSCALE_POD_MIN_R = 256      # the pod-routed run must reach this R
 
 
 def _finite_pos(x) -> bool:
@@ -106,6 +123,24 @@ def check(doc: dict) -> None:
         wins = sum(bool(r["bfio_wins"]) for r in scen)
         assert wins >= FLEET_MIN_WINS, \
             f"bfio beat round_robin on only {wins}/{len(scen)} scenarios"
+    if "fleet_scale" in expected:
+        fs_kinds = {r.get("kind") for r in rows
+                    if r.get("section") == "fleet_scale"}
+        assert fs_kinds == {"speedup", "pod"}, fs_kinds
+        spd = [r for r in rows if r.get("section") == "fleet_scale"
+               and r.get("kind") == "speedup"]
+        pod = [r for r in rows if r.get("section") == "fleet_scale"
+               and r.get("kind") == "pod"]
+        if not meta.get("smoke"):
+            # THE fleet_scale gates, full grid only
+            big = [r for r in spd if r["R"] >= FSCALE_MIN_R]
+            assert big, f"no speedup rows at R >= {FSCALE_MIN_R}"
+            best = max(r["speedup"] for r in big)
+            assert best >= FSCALE_MIN_SPEEDUP, \
+                (f"vec fleet hot path only {best:.2f}x ref at "
+                 f"R >= {FSCALE_MIN_R} (need {FSCALE_MIN_SPEEDUP}x)")
+            assert any(r["R"] >= FSCALE_POD_MIN_R for r in pod), \
+                f"no pod-routed run at R >= {FSCALE_POD_MIN_R}"
     for r in rows:
         sec = r["section"]
         if sec == "solver":
@@ -209,6 +244,39 @@ def check(doc: dict) -> None:
                     FLEET_PARITY_KEYS - set(r)
                 assert r["stats_equal"] is True, \
                     "fleet(R=1) diverged from the bare ServingEngine"
+        elif sec == "fleet_scale":
+            if r.get("kind") == "speedup":
+                assert FSCALE_SPEEDUP_KEYS <= set(r), \
+                    FSCALE_SPEEDUP_KEYS - set(r)
+                assert _finite_pos(r["ref_steps_per_s"])
+                assert _finite_pos(r["vec_steps_per_s"])
+                assert _finite_pos(r["steps"])
+                # the bit-identity contract holds at every shape, smoke
+                # included: same stats, same per-step telemetry
+                assert r["stats_equal"] is True, \
+                    "vec fleet stats diverged from the ref fleet"
+                assert r["telemetry_equal"] is True, \
+                    "vec fleet telemetry diverged from the ref fleet"
+                assert r["failed"] == 0
+                assert r["completed"] == r["n_requests"]
+                if not doc["meta"].get("smoke"):
+                    assert r["speedup"] >= FSCALE_MIN_EACH, \
+                        (r["router"], r["speedup"])
+            else:
+                assert r.get("kind") == "pod", r.get("kind")
+                assert FSCALE_POD_KEYS <= set(r), FSCALE_POD_KEYS - set(r)
+                for router in ("round_robin", "pod_bfio"):
+                    assert _finite_pos(r[f"{router}_steps_per_s"])
+                    assert r[f"{router}_imbalance"] >= 0
+                    # the pod-routed run completes: nothing fails
+                    assert r[f"{router}_failed"] == 0
+                    assert r[f"{router}_completed"] == r["n_requests"]
+                if not doc["meta"].get("smoke") \
+                        and r["R"] >= FSCALE_POD_MIN_R:
+                    assert r["pod_wins"] is True, \
+                        (f"pod_bfio imbalance {r['pod_bfio_imbalance']:.1f}"
+                         f" not below flat round_robin "
+                         f"{r['round_robin_imbalance']:.1f} at R={r['R']}")
 
 
 def run_smoke(sections=None) -> dict:

@@ -187,3 +187,74 @@ print("OK: fleet tier — identical generations across routers; two-tier "
       "BF-IO moved only the efficiency "
       f"(imbalance {fleet_runs['round_robin'][0]['avg_cross_imbalance']:.1f}"
       f" -> {fleet_runs['bfio'][0]['avg_cross_imbalance']:.1f})")
+
+# ----------------------------------------------------------------------
+# Scaling the replica axis (the ``fleet_scale`` regime).  The fleet hot
+# path is vectorized (``fleet_mode="vec"``, the default): per-replica
+# loads/counts/free-slots live in incrementally-updated numpy arrays
+# instead of per-step Python gathers, so per-step fleet overhead stays
+# O(touched replicas) instead of O(R).  The pre-vectorization loop stays
+# live as ``fleet_mode="ref"`` and both modes must agree bit-for-bit —
+# vectorization, like routing, must be a pure efficiency knob.
+# ----------------------------------------------------------------------
+ref_vec = {}
+for fleet_mode in ["ref", "vec"]:
+    fleet = FleetServer(cfg, params, fleet_ec, n_replicas=4,
+                        router="bfio", policy="bfio_h0", mesh=mesh,
+                        fleet_mode=fleet_mode)
+    fleet.submit_scenario(scenario)
+    ref_vec[fleet_mode] = (fleet.run(),
+                           [r.generated for r in fleet.requests])
+assert ref_vec["ref"] == ref_vec["vec"], \
+    "vectorized fleet path diverged from the reference loop!"
+print("OK: fleet_mode='vec' bit-identical to the ref loop at R=4 "
+      f"({ref_vec['vec'][0]['steps']} steps, "
+      f"{ref_vec['vec'][0]['tokens']} tokens)")
+
+# At R in the hundreds a single global BF-IO solve per step is itself a
+# bottleneck, so the router goes hierarchical: replicas are grouped into
+# pods, one *batched* BF-IO solve scores all pods at once, then a
+# per-pod solve places within the winner.  A predicted-output-length
+# term ("oracle" reads each request's decode budget) sharpens the
+# router's load estimates; heterogeneous replica classes (mixed
+# worker/slot shapes) exercise capacity-aware routing.
+pod_scenario = make_scenario("steady", n_requests=48, n_replicas=12,
+                             n_workers=1, slots_per_worker=2,
+                             max_seq_len=128, vocab_size=cfg.vocab_size,
+                             seed=5, step_overhead=1e-3, t_token=2e-4)
+pod_ec = EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=128,
+                      step_overhead=1e-3, t_token=2e-4)
+fleet = FleetServer(cfg, params, pod_ec, n_replicas=12,
+                    router="pod_bfio_p4", policy="bfio_h0", mesh=mesh,
+                    predictor="oracle")
+fleet.submit_scenario(pod_scenario)
+pod_stats = fleet.run()
+assert pod_stats["failed"] == 0
+print(f"OK: hierarchical pod routing (R=12, 4 pods, oracle length "
+      f"predictor) — {pod_stats['tokens']} tokens, imbalance "
+      f"{pod_stats['avg_cross_imbalance']:.1f}, "
+      f"{pod_stats['energy_per_token']:.3f} J/tok")
+
+# heterogeneous fleet: two small replicas (2 slots) + two large (4
+# slots), grouped by class into pods behind the capacity-normalized
+# pod router — under sustained pressure the large class absorbs more
+# work in proportion to its capacity
+import dataclasses
+
+classes = [(2, pod_ec),
+           (2, dataclasses.replace(pod_ec, slots_per_worker=4))]
+fleet = FleetServer(cfg, params, pod_ec, router="pod_bfio_p2",
+                    policy="bfio_h0", mesh=mesh, replica_classes=classes)
+fleet.submit_scenario(make_scenario(
+    "flash_crowd", n_requests=96, n_replicas=4, n_workers=1,
+    slots_per_worker=3, max_seq_len=128, vocab_size=cfg.vocab_size,
+    seed=9, step_overhead=1e-3, t_token=2e-4))
+het_stats = fleet.run()
+assert het_stats["failed"] == 0
+small = sum(r["tokens"] for r in het_stats["replicas"][:2])
+large = sum(r["tokens"] for r in het_stats["replicas"][2:])
+assert large > small, "capacity-aware routing should favor the large class"
+print(f"OK: heterogeneous fleet (2x 2-slot + 2x 4-slot pods) — "
+      f"capacity-normalized routing sent {large} tokens to the large "
+      f"class vs {small} to the small ({het_stats['tokens']} total, "
+      f"0 failed)")

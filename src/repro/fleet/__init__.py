@@ -3,14 +3,17 @@
 The tier above :mod:`repro.serving` — R independent engine replicas
 behind a pluggable :class:`~repro.fleet.router.FleetRouter`
 (round-robin / least-loaded / power-of-two / BF-IO via the batched
-solver), driven barrier-stepped by
-:class:`~repro.fleet.server.FleetServer`, fed by the named scenario
-traces of :mod:`repro.fleet.workloads`, and observed through the
-JSONL-exporting :mod:`repro.fleet.telemetry` subsystem."""
+solver / two-level hierarchical pod BF-IO for R in the hundreds),
+driven barrier-stepped by :class:`~repro.fleet.server.FleetServer`
+(``fleet_mode="vec"`` hot path with a bit-identical ``"ref"``
+baseline), fed by the named scenario traces of
+:mod:`repro.fleet.workloads`, and observed through the JSONL-exporting
+:mod:`repro.fleet.telemetry` subsystem."""
 from .router import (  # noqa: F401
     BFIORouter,
     FleetRouter,
     LeastLoadedRouter,
+    PodBFIORouter,
     PowerOfDRouter,
     RoundRobinRouter,
     RouterContext,

@@ -30,7 +30,18 @@ Routers mirror the engine-policy taxonomy (Appendix A.1):
   windowed-imbalance solve over all waiting candidates via the existing
   :func:`~repro.core.balancer_jax.bfio_assign_batch` (a leading cluster
   axis of 1 here; multi-cluster fleets batch many routing solves into
-  the same compiled call).
+  the same compiled call);
+* ``pod_bfio`` — two-level hierarchical BF-IO for R in the hundreds:
+  level 1 spreads candidates over P pods of replicas
+  (capacity-normalized least-loaded, so heterogeneous pods fill
+  proportionally), level 2 runs ONE ``bfio_assign_batch`` call whose
+  cluster axis is the pods — the vmap that existed all along, now
+  carrying real traffic.  Solve cost scales with the pod size, not R.
+
+Load-aware routers optionally fold in a predicted output length per
+candidate (``RouterContext.pred_out`` x ``pred_weight``) — the
+predictive-scheduling signal — and see per-replica slot capacity for
+heterogeneous fleets (``RouterContext.capacity``).
 """
 from __future__ import annotations
 
@@ -48,6 +59,7 @@ __all__ = [
     "LeastLoadedRouter",
     "PowerOfDRouter",
     "BFIORouter",
+    "PodBFIORouter",
     "make_router",
 ]
 
@@ -71,6 +83,14 @@ class RouterContext:
     drift: DriftModel = dataclasses.field(default_factory=unit_drift)
     rng: np.random.Generator = dataclasses.field(
         default_factory=lambda: np.random.default_rng(0))
+    # (R,) total engine slots per replica — equal for homogeneous fleets,
+    # the normalizer for capacity-aware (hierarchical) routing when
+    # replica classes differ.  None means "assume homogeneous".
+    capacity: Optional[np.ndarray] = None
+    # (n,) predicted output length per candidate (arrival order), or None
+    # when the fleet has no predictor.  Routers that opt in (pred_weight
+    # > 0) add it to each candidate's placement size.
+    pred_out: Optional[np.ndarray] = None
 
     @property
     def R(self) -> int:
@@ -171,11 +191,17 @@ class BFIORouter(FleetRouter):
     returns the windowed-imbalance-minimizing total assignment.  Caps
     are set to the candidate count — the fleet tier is total, capacity
     is the replica scheduler's concern.
+
+    ``pred_weight`` > 0 folds ``pred_weight * ctx.pred_out`` into each
+    candidate's size: a request predicted to decode long is placed as if
+    it were that much heavier now.  The default 0.0 is an exact no-op.
     """
 
-    def __init__(self, H: int = 0, swap_iters: int = 8) -> None:
+    def __init__(self, H: int = 0, swap_iters: int = 8,
+                 pred_weight: float = 0.0) -> None:
         self.H = int(H)
         self.swap_iters = int(swap_iters)
+        self.pred_weight = float(pred_weight)
         self.name = f"bfio_h{H}" if H else "bfio"
 
     def _growth(self, ctx: RouterContext) -> np.ndarray:
@@ -183,6 +209,15 @@ class BFIORouter(FleetRouter):
         for h in range(1, self.H + 1):
             g[h] = g[h - 1] + ctx.drift.increment(ctx.k + h)
         return g
+
+    def _sizes(self, ctx: RouterContext) -> np.ndarray:
+        """(n,) effective candidate sizes: prefill size plus (optionally)
+        the weighted predicted output length."""
+        sizes = ctx.wait_sizes.astype(np.float64)
+        if self.pred_weight != 0.0 and ctx.pred_out is not None:
+            sizes = sizes + self.pred_weight * np.asarray(
+                ctx.pred_out, dtype=np.float64)
+        return sizes
 
     def route(self, ctx: RouterContext) -> np.ndarray:
         import jax.numpy as jnp
@@ -195,7 +230,7 @@ class BFIORouter(FleetRouter):
                 + ctx.counts[:, None] * growth[None, :])  # (R, W)
         npad = _pad_bucket(n)
         cands = np.zeros((npad, self.H + 1))
-        cands[:n] = ctx.wait_sizes[:, None] + growth[None, :]
+        cands[:n] = self._sizes(ctx)[:, None] + growth[None, :]
         valid = np.zeros(npad, dtype=bool)
         valid[:n] = True
         a = bfio_assign_batch(
@@ -212,6 +247,95 @@ class BFIORouter(FleetRouter):
         return out
 
 
+class PodBFIORouter(BFIORouter):
+    """Two-level hierarchical BF-IO: replicas are grouped into ``pods``
+    contiguous pods (sizes differ by at most one when R % pods != 0).
+
+    Level 1 assigns each candidate to a pod by capacity-normalized
+    least-loaded (sequential, each placement updates the running
+    estimate); level 2 solves all pods' placements in ONE
+    :func:`~repro.core.balancer_jax.bfio_assign_batch` call with the pod
+    axis as the cluster axis — solver cost grows with the pod size and
+    per-pod candidate count, not with R.  With ``pods=1`` the solver
+    sees bit-identical inputs to the flat :class:`BFIORouter` (a unit
+    test pins this), so the hierarchy is a pure scaling knob.
+    """
+
+    def __init__(self, pods: int = 4, H: int = 0, swap_iters: int = 8,
+                 pred_weight: float = 0.0) -> None:
+        super().__init__(H=H, swap_iters=swap_iters,
+                         pred_weight=pred_weight)
+        self.pods = int(pods)
+        if self.pods < 1:
+            raise ValueError(f"pods must be >= 1, got {pods}")
+        self.name = (f"pod_bfio_p{self.pods}"
+                     + (f"_h{self.H}" if self.H else ""))
+
+    def route(self, ctx: RouterContext) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from ..core.balancer_jax import bfio_assign_batch
+
+        n, R = ctx.n_wait, ctx.R
+        if n == 0:
+            return np.empty(0, dtype=np.int64)
+        P = min(self.pods, R)
+        members = np.array_split(np.arange(R), P)
+        sizes = self._sizes(ctx)
+        growth = self._growth(ctx)                       # (W,)
+        W = self.H + 1
+
+        # level 1: capacity-normalized least-loaded pod, sequential so a
+        # burst spreads instead of piling onto one pod.
+        cap = (np.asarray(ctx.capacity, dtype=np.float64)
+               if ctx.capacity is not None else np.ones(R))
+        pod_cap = np.array([max(cap[m].sum(), 1e-12) for m in members])
+        run = np.array([ctx.loads[m].sum() for m in members]) / pod_cap
+        pod_of = np.empty(n, dtype=np.int64)
+        for i in range(n):
+            p = int(np.argmin(run))
+            pod_of[i] = p
+            run[p] += sizes[i] / pod_cap[p]
+        order = [np.flatnonzero(pod_of == p) for p in range(P)]
+        per = np.array([o.size for o in order], dtype=np.int64)
+
+        # level 2: one batched solve, pods on the cluster axis.  Pods
+        # smaller than the widest get zero caps + huge base loads on
+        # their padding machine rows so the solver never picks them.
+        npad = _pad_bucket(int(per.max()))
+        rmax = max(m.size for m in members)
+        base = np.full((P, rmax, W), 1e30)
+        caps = np.zeros((P, rmax), dtype=np.int32)
+        cands = np.zeros((P, npad, W))
+        valid = np.zeros((P, npad), dtype=bool)
+        for p, m in enumerate(members):
+            base[p, :m.size] = (ctx.loads[m][:, None]
+                                + ctx.counts[m][:, None] * growth[None, :])
+            caps[p, :m.size] = npad
+            idx = order[p]
+            cands[p, :idx.size] = sizes[idx][:, None] + growth[None, :]
+            valid[p, :idx.size] = True
+        a = np.asarray(bfio_assign_batch(
+            jnp.asarray(base, jnp.float32),
+            jnp.asarray(caps),
+            jnp.asarray(cands, jnp.float32),
+            jnp.asarray(valid),
+            jnp.asarray(per, jnp.int32),
+            swap_iters=self.swap_iters))
+
+        out = np.empty(n, dtype=np.int64)
+        for p, m in enumerate(members):
+            idx = order[p]
+            if idx.size == 0:
+                continue
+            ap = a[p, :idx.size].astype(np.int64)
+            bad = (ap < 0) | (ap >= m.size)
+            if bad.any():   # defensive: caps are ample, so never hit
+                ap = np.where(bad, int(np.argmin(ctx.loads[m])), ap)
+            out[idx] = m[ap]
+        return out
+
+
 def make_router(name, **kw) -> FleetRouter:
     if isinstance(name, FleetRouter):
         return name
@@ -220,6 +344,19 @@ def make_router(name, **kw) -> FleetRouter:
         return RoundRobinRouter()
     if name in ("ll", "least_loaded"):
         return LeastLoadedRouter()
+    if name.startswith("pod_bfio"):
+        # pod_bfio[_pP][_hH], e.g. pod_bfio_p16 or pod_bfio_p8_h2
+        for part in name[len("pod_bfio"):].split("_"):
+            if not part:
+                continue
+            if part[0] == "p" and part[1:].isdigit():
+                kw.setdefault("pods", int(part[1:]))
+            elif part[0] == "h" and part[1:].isdigit():
+                kw.setdefault("H", int(part[1:]))
+            else:
+                raise ValueError(
+                    f"unknown pod_bfio suffix {part!r} in {name!r}")
+        return PodBFIORouter(**kw)
     if name.startswith("pod"):
         d = int(name[3:]) if len(name) > 3 else kw.pop("d", 2)
         return PowerOfDRouter(d=d)

@@ -10,7 +10,9 @@ arrival streams, and a router spreading traffic across them.
 * R independent :class:`ServingEngine` replicas (shared params — one
   compiled model serves every replica, as DP shards of one deployment),
   each with its own slot table, KV backend, wait queue, and engine-tier
-  placement policy;
+  placement policy.  Replicas may be heterogeneous
+  (``replica_classes``): per-replica G/B/power constants, with slot
+  capacity surfaced to capacity-aware routers;
 * a barrier-stepped continuous loop: release due arrivals, route them
   (:mod:`repro.fleet.router` — every waiting request is placed every
   step), then step every busy replica once; the fleet clock advances by
@@ -22,6 +24,17 @@ arrival streams, and a router spreading traffic across them.
   ``status``/``error``) streamed into
   :class:`~repro.fleet.telemetry.FleetTelemetry`.
 
+Two fleet modes, following the repo's ref/vec pattern (``engine_mode``,
+``dispatch``): ``fleet_mode="ref"`` re-gathers every replica's
+:meth:`~repro.serving.engine.ServingEngine.load_snapshot` each step —
+O(R) Python work per barrier, the live baseline the ``fleet_scale``
+bench times against — while ``fleet_mode="vec"`` (default) keeps the
+per-replica snapshot values in incrementally-updated numpy arrays,
+refreshed only for replicas actually touched (routed to or stepped), so
+a mostly-idle R=256 fleet pays for its busy replicas, not for R.  Both
+modes feed the same values through the same arithmetic, so their stats
+and telemetry are bit-identical (gated in CI across all routers).
+
 Failure isolation: a request the engine can never serve (decode growth
 past its whole pool, or a prompt rejected at submit) fails *that
 request* — surfaced on ``ServeRequest.status`` / ``.error`` and in the
@@ -31,12 +44,14 @@ telemetry — while both the replica and the fleet keep serving.
 stream (the single replica sees the identical submission sequence), so
 every fleet run is anchored to the exhaustively-tested one-replica
 semantics; ``benchmarks/balancer_bench.py`` section ``fleet`` gates
-that parity plus the router-tier win (BF-IO vs round-robin) in CI.
+that parity plus the router-tier win (BF-IO vs round-robin), and
+section ``fleet_scale`` gates ref-vs-vec stats equality plus the vec
+speedup, in CI.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Optional, Union
+from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
@@ -51,26 +66,67 @@ __all__ = ["FleetServer"]
 
 
 class FleetServer:
-    """Barrier-stepped fleet of engine replicas behind a router seam."""
+    """Barrier-stepped fleet of engine replicas behind a router seam.
+
+    ``replica_classes`` (optional) replaces the homogeneous
+    ``n_replicas x engine_cfg`` fleet with a list of ``(count,
+    EngineConfig)`` classes, expanded in order; per-replica capacity and
+    idle power follow each class's config.  ``predictor`` (None,
+    ``"oracle"``, or a callable ``ServeRequest -> float``) supplies a
+    predicted output length per routing candidate, surfaced to routers
+    as ``RouterContext.pred_out`` (the oracle reads
+    ``req.max_new_tokens`` — an upper bound on what the request can
+    decode).
+    """
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  *, n_replicas: int = 4,
                  router: Union[str, FleetRouter] = "bfio",
                  policy: str = "bfio_h0", mesh=None, drift=None,
                  telemetry: Optional[FleetTelemetry] = None,
-                 seed: int = 0):
-        if n_replicas < 1:
-            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
-        self.R = int(n_replicas)
+                 seed: int = 0, fleet_mode: str = "vec",
+                 replica_classes: Optional[
+                     Sequence[tuple[int, EngineConfig]]] = None,
+                 predictor: Union[None, str,
+                                  Callable[[ServeRequest], float]] = None):
+        if fleet_mode not in ("ref", "vec"):
+            raise ValueError(
+                f"fleet_mode must be 'ref' or 'vec', got {fleet_mode!r}")
+        self.fleet_mode = fleet_mode
+        if replica_classes is not None:
+            ecs: list[EngineConfig] = []
+            for count, klass_ec in replica_classes:
+                if count < 1:
+                    raise ValueError(
+                        f"replica class count must be >= 1, got {count}")
+                ecs.extend([klass_ec] * int(count))
+            if not ecs:
+                raise ValueError("replica_classes is empty")
+        else:
+            if n_replicas < 1:
+                raise ValueError(
+                    f"n_replicas must be >= 1, got {n_replicas}")
+            ecs = [engine_cfg] * int(n_replicas)
+        self.R = len(ecs)
         self.router = make_router(router)
         self.engines = [
-            ServingEngine(cfg, params, engine_cfg, make_policy(policy),
+            ServingEngine(cfg, params, ec, make_policy(policy),
                           mesh=mesh, drift=drift)
-            for _ in range(self.R)
+            for ec in ecs
         ]
         self.ec = engine_cfg
         self.telemetry = telemetry
         self.rng = np.random.default_rng(seed)
+        if predictor is None:
+            self._predict = None
+        elif predictor == "oracle":
+            self._predict = lambda r: float(r.max_new_tokens)
+        elif callable(predictor):
+            self._predict = predictor
+        else:
+            raise ValueError(
+                f"predictor must be None, 'oracle', or a callable, "
+                f"got {predictor!r}")
         self.t_now = 0.0
         self.steps = 0
         self.idle_j = 0.0            # barrier + between-arrival idle draw
@@ -85,13 +141,28 @@ class FleetServer:
         self._live: list[dict] = []            # routed, not finalized
         self.requests: list[ServeRequest] = []
         self.assignments: dict[int, int] = {}  # rid -> replica
+        # per-replica constants (heterogeneous-safe)
+        self._idle_power_vec = np.array(
+            [float(e.ec.power.power(0.0)) * e.ec.n_workers
+             for e in self.engines])
+        self._capacity = np.array([float(e.N) for e in self.engines])
+        # vec mode: cached per-replica LoadSnapshot fields, refreshed only
+        # for replicas that were routed to or stepped (see _refresh)
+        self._snap_res = np.zeros(self.R)
+        self._snap_wait_cost = np.zeros(self.R)
+        self._snap_active = np.zeros(self.R, dtype=np.int64)
+        self._snap_waiting = np.zeros(self.R, dtype=np.int64)
+        self._snap_free = np.array([e.N for e in self.engines],
+                                   dtype=np.int64)
+        self._snap_tokens = np.zeros(self.R, dtype=np.int64)
+        self._snap_preempt = np.zeros(self.R, dtype=np.int64)
+        self._snap_hits = np.zeros(self.R, dtype=np.int64)
+        self._busy_mask = np.zeros(self.R, dtype=bool)
+        # telemetry per-step deltas: previous cumulative fleet totals
+        self._prev_preemptions = 0
+        self._prev_prefix_hits = 0
 
     # ------------------------------------------------------------------
-    @property
-    def _idle_power(self) -> float:
-        """Idle draw of ONE replica (all its workers at u=0)."""
-        return float(self.ec.power.power(0.0)) * self.ec.n_workers
-
     def submit(self, req: ServeRequest, arrival_time: float = 0.0) -> None:
         """Queue a request for release at ``arrival_time`` on the fleet
         clock (0 = immediately)."""
@@ -112,29 +183,40 @@ class FleetServer:
             t, _, req = heapq.heappop(self._pending)
             self._queue.append((t, req))
 
-    def _committed(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(loads, counts, free_slots) per replica; committed = resident
-        + queued-at-replica (see RouterContext)."""
-        loads = np.zeros(self.R)
-        counts = np.zeros(self.R, dtype=np.int64)
-        free = np.zeros(self.R, dtype=np.int64)
-        for r, eng in enumerate(self.engines):
-            active = int(eng.table.active.sum())
-            loads[r] = float(eng._loads().sum()) \
-                + sum(eng._req_cost(w) for w in eng.wait)
-            counts[r] = active + len(eng.wait)
-            free[r] = eng.N - active
-        return loads, counts, free
+    def _refresh(self, replicas) -> None:
+        """Re-read :meth:`ServingEngine.load_snapshot` for the given
+        replica ids into the vec-mode cache arrays.  Everything the
+        fleet hot path reads per step flows through here, so vec cost
+        scales with touched replicas, not R."""
+        for r in replicas:
+            s = self.engines[r].load_snapshot()
+            self._snap_res[r] = s.resident_load
+            self._snap_wait_cost[r] = s.wait_cost
+            self._snap_active[r] = s.active
+            self._snap_waiting[r] = s.waiting
+            self._snap_free[r] = s.free_slots
+            self._snap_tokens[r] = s.tokens_out
+            self._snap_preempt[r] = s.preemptions
+            self._snap_hits[r] = s.prefix_hits
+            self._busy_mask[r] = s.busy
 
-    def _route(self) -> None:
-        if not self._queue:
-            return
-        loads, counts, free = self._committed()
+    def _pred_out(self) -> Optional[np.ndarray]:
+        if self._predict is None:
+            return None
+        return np.array([float(self._predict(req))
+                         for _, req in self._queue])
+
+    def _dispatch(self, loads: np.ndarray, counts: np.ndarray,
+                  free: np.ndarray) -> set:
+        """Route every due candidate given the committed per-replica
+        state; returns the set of replicas submitted to.  Shared by both
+        fleet modes — identical context in, identical assignment out."""
         ctx = RouterContext(
             k=self.steps, loads=loads, counts=counts, free_slots=free,
             wait_sizes=np.array([float(len(r.tokens))
                                  for _, r in self._queue]),
-            drift=self.engines[0].drift, rng=self.rng)
+            drift=self.engines[0].drift, rng=self.rng,
+            capacity=self._capacity, pred_out=self._pred_out())
         assign = np.asarray(self.router.route(ctx))
         if assign.shape != (len(self._queue),) or (assign < 0).any() \
                 or (assign >= self.R).any():
@@ -144,6 +226,7 @@ class FleetServer:
                 f"[{assign.min() if assign.size else 0}, "
                 f"{assign.max() if assign.size else 0}]) for "
                 f"{len(self._queue)} candidates over {self.R} replicas")
+        touched = set()
         for (t_arrival, req), g in zip(self._queue, assign):
             g = int(g)
             self.assignments[req.rid] = g
@@ -152,12 +235,35 @@ class FleetServer:
                    "ttft": None}
             try:
                 self.engines[g].submit(req)
+                touched.add(g)
             except ValueError as e:     # e.g. prompt can never fit the pool
                 req.error = str(e)
                 req.status = "failed"
                 req.t_finish = self.t_now
             self._live.append(rec)
         self._queue = []
+        return touched
+
+    def _route_ref(self) -> None:
+        """Per-route full re-gather from every replica (the baseline)."""
+        if not self._queue:
+            return
+        snaps = [e.load_snapshot() for e in self.engines]
+        self._dispatch(
+            np.array([s.committed_load for s in snaps]),
+            np.array([s.committed_count for s in snaps], dtype=np.int64),
+            np.array([s.free_slots for s in snaps], dtype=np.int64))
+
+    def _route_vec(self) -> None:
+        """Route from the cached arrays; refresh only touched replicas."""
+        if not self._queue:
+            return
+        touched = self._dispatch(
+            self._snap_res + self._snap_wait_cost,
+            self._snap_active + self._snap_waiting,
+            self._snap_free)
+        if touched:
+            self._refresh(sorted(touched))
 
     def _finalize_requests(self) -> None:
         """Fleet-clock request bookkeeping after a barrier step."""
@@ -189,63 +295,123 @@ class FleetServer:
     def _busy(self, eng: ServingEngine) -> bool:
         return bool(eng.wait) or bool(eng.table.active.any())
 
-    def step(self) -> dict:
-        """One fleet barrier step: release due arrivals, route, step
-        every busy replica, advance the fleet clock by the slowest
-        replica's step and charge idle power for the slack."""
+    # ------------------------------------------------------------------
+    def _account(self, *, loads: np.ndarray, dts: np.ndarray,
+                 de: np.ndarray, any_busy: bool, tokens: int,
+                 active: list, waiting: list, preemptions: int,
+                 prefix_hits: int, queued: int) -> dict:
+        """Shared barrier accounting: clock/idle/imbalance update,
+        request finalization, telemetry row, step info.  Both fleet
+        modes call this with identical values, so every derived number
+        is computed by identical arithmetic — the bit-identity gate
+        rests on this."""
+        if any_busy:
+            imb = step_imbalance(loads)
+            dt = float(dts.max())
+            self.imbalance_sum += imb
+            idle = float(((dt - dts) * self._idle_power_vec).sum())
+        else:
+            # fleet idle: fast-forward to the next arrival
+            imb = 0.0
+            dt = max(self._pending[0][0] - self.t_now, 0.0) \
+                if self._pending else 0.0
+            idle = float(dt * self._idle_power_vec.sum())
+        self.idle_j += idle
+        self.t_now += dt
+        self.steps += 1
+        self._finalize_requests()
+        d_preempt = preemptions - self._prev_preemptions
+        d_hits = prefix_hits - self._prev_prefix_hits
+        self._prev_preemptions = preemptions
+        self._prev_prefix_hits = prefix_hits
+        if self.telemetry is not None:
+            self.telemetry.record_step(
+                step=self.steps, t=self.t_now, dt=dt,
+                replica_loads=loads,
+                replica_active=active, replica_waiting=waiting,
+                cross_imbalance=imb, energy_j=float(de.sum()),
+                idle_j=idle, tokens=tokens,
+                preemptions=d_preempt, prefix_hits=d_hits)
+        return {"t": self.t_now, "dt": dt, "imbalance": imb,
+                "tokens": tokens, "idle_j": idle,
+                "waiting": len(self._pending) + len(self._queue) + queued,
+                "replica_waiting": waiting}
+
+    def _step_ref(self) -> dict:
+        """Reference barrier step: every per-replica quantity is
+        re-gathered from the engines via Python loops — O(R) per step
+        regardless of how many replicas are busy."""
         self._release_arrivals()
-        self._route()
-        loads = np.array([float(e._loads().sum()) for e in self.engines])
-        imb = step_imbalance(loads)
+        self._route_ref()
+        snaps = [e.load_snapshot() for e in self.engines]
+        loads = np.array([s.resident_load for s in snaps])
+        tokens0 = sum(s.tokens_out for s in snaps)
         dts = np.zeros(self.R)
         de = np.zeros(self.R)
-        tokens0 = sum(e.tokens_out for e in self.engines)
         any_busy = False
         for r, eng in enumerate(self.engines):
-            if not self._busy(eng):
+            if not snaps[r].busy:
                 continue
             any_busy = True
             t0, e0 = eng.t_now, eng.energy_j
             eng.step()
             dts[r] = eng.t_now - t0
             de[r] = eng.energy_j - e0
-        if any_busy:
-            dt = float(dts.max())
-            self.imbalance_sum += imb
-        else:
-            # fleet idle: fast-forward to the next arrival
-            imb = 0.0
-            dt = max(self._pending[0][0] - self.t_now, 0.0) \
-                if self._pending else 0.0
-            dts[:] = dt     # every replica idles the whole gap
-        idle = float(((dt - dts) * self._idle_power).sum())
-        if not any_busy:
-            idle = dt * self._idle_power * self.R
-        self.idle_j += idle
-        self.t_now += dt
-        self.steps += 1
-        self._finalize_requests()
-        tokens = sum(e.tokens_out for e in self.engines) - tokens0
-        if self.telemetry is not None:
-            self.telemetry.record_step(
-                step=self.steps, t=self.t_now, dt=dt,
-                replica_loads=loads,
-                replica_active=[int(e.table.active.sum())
-                                for e in self.engines],
-                replica_waiting=[len(e.wait) for e in self.engines],
-                cross_imbalance=imb, energy_j=float(de.sum()),
-                idle_j=idle, tokens=tokens,
-                preemptions=sum(e.preemptions for e in self.engines),
-                prefix_hits=sum(e.stats()["prefix_hits"]
-                                for e in self.engines))
-        return {"t": self.t_now, "dt": dt, "imbalance": imb,
-                "tokens": tokens, "idle_j": idle,
-                "waiting": len(self._queue) + len(self._pending)}
+        post = [e.load_snapshot() for e in self.engines]
+        return self._account(
+            loads=loads, dts=dts, de=de, any_busy=any_busy,
+            tokens=sum(s.tokens_out for s in post) - tokens0,
+            active=[s.active for s in post],
+            waiting=[s.waiting for s in post],
+            preemptions=sum(s.preemptions for s in post),
+            prefix_hits=sum(s.prefix_hits for s in post),
+            queued=sum(s.waiting for s in post))
+
+    def _step_vec(self) -> dict:
+        """Vectorized barrier step: per-replica state lives in cached
+        arrays refreshed only for touched replicas, and all fleet
+        bookkeeping is array ops over R."""
+        self._release_arrivals()
+        self._route_vec()
+        # pre-step loads: copy before the post-step refresh overwrites
+        loads = self._snap_res.copy()
+        tokens0 = int(self._snap_tokens.sum())
+        dts = np.zeros(self.R)
+        de = np.zeros(self.R)
+        busy_idx = np.flatnonzero(self._busy_mask)
+        for r in busy_idx:
+            eng = self.engines[r]
+            t0, e0 = eng.t_now, eng.energy_j
+            eng.step()
+            dts[r] = eng.t_now - t0
+            de[r] = eng.energy_j - e0
+        if busy_idx.size:
+            self._refresh(busy_idx)
+        return self._account(
+            loads=loads, dts=dts, de=de, any_busy=busy_idx.size > 0,
+            tokens=int(self._snap_tokens.sum()) - tokens0,
+            active=self._snap_active.tolist(),
+            waiting=self._snap_waiting.tolist(),
+            preemptions=int(self._snap_preempt.sum()),
+            prefix_hits=int(self._snap_hits.sum()),
+            queued=int(self._snap_waiting.sum()))
+
+    def step(self) -> dict:
+        """One fleet barrier step: release due arrivals, route, step
+        every busy replica, advance the fleet clock by the slowest
+        replica's step and charge idle power for the slack."""
+        if self.fleet_mode == "vec":
+            return self._step_vec()
+        return self._step_ref()
+
+    def _any_busy(self) -> bool:
+        if self.fleet_mode == "vec":
+            return bool(self._busy_mask.any())
+        return any(self._busy(e) for e in self.engines)
 
     def run(self, max_steps: int = 100_000) -> dict:
         """Step until every submitted request reaches a terminal state."""
-        while (self._pending or self._queue
-               or any(self._busy(e) for e in self.engines)):
+        while self._pending or self._queue or self._any_busy():
             if self.steps >= max_steps:
                 raise RuntimeError("fleet exceeded max_steps")
             self.step()

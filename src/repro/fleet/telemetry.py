@@ -4,7 +4,8 @@ JSONL export.
 :class:`FleetTelemetry` is the observability seam of the fleet layer —
 :class:`~repro.fleet.server.FleetServer` feeds it one record per barrier
 step (per-replica loads, cross-replica imbalance, energy split into
-serving vs barrier-idle, token counts, preemption/prefix counters) and
+serving vs barrier-idle, token counts, per-step preemption/prefix-hit
+deltas) and
 one record per finished request (fleet-clock TTFT / TPOT / end-to-end
 latency, terminal status, error text), and :meth:`summary` folds them
 into the serving scorecard: latency percentiles, SLO attainment,
@@ -117,10 +118,10 @@ class FleetTelemetry:
             "mean_cross_imbalance": float(np.mean(imb)) if imb else 0.0,
             "slo_attainment": len(attained) / max(len(reqs), 1),
             "slo": dataclasses.asdict(self.slo),
-            "preemptions": (self.steps[-1]["preemptions"]
-                            if self.steps else 0),
-            "prefix_hits": (self.steps[-1]["prefix_hits"]
-                            if self.steps else 0),
+            # step rows carry per-step deltas (not running totals), so
+            # the run totals are their sums
+            "preemptions": sum(s["preemptions"] for s in self.steps),
+            "prefix_hits": sum(s["prefix_hits"] for s in self.steps),
         }
         for key in ("ttft", "tpot", "latency"):
             out[key] = percentiles([r[key] for r in done])

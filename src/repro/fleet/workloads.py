@@ -6,7 +6,7 @@ diurnal sinusoidal ramp) plus a :class:`~repro.data.synthetic.
 WorkloadSpec` length model into a concrete stream of
 :class:`FleetRequest`\\ s — wall-clock arrival times, materialized prompt
 token ids, and decode budgets — sized to a given fleet shape
-(R replicas x G workers x B slots).  The five scenarios cover the load
+(R replicas x G workers x B slots).  The scenarios cover the load
 shapes a fleet router must ride:
 
 * ``steady`` — stationary Poisson at ~1.3x capacity (Definition 1's
@@ -22,6 +22,12 @@ shapes a fleet router must ride:
   exercises prefix caching when the paged backend is on.
 * ``long_doc`` — document-scale prompts with short summaries: maximal
   prefill dispersion, the size-aware router's best case.
+* ``trickle`` — sparse arrivals (at most ~one request in flight
+  fleet-wide) with short prompts and long decode budgets: the large-R
+  probe regime (background scoring / agent traffic spread over
+  hundreds of mostly-idle replicas), where per-step fleet bookkeeping
+  — not model compute — dominates wall clock.  The ``fleet_scale``
+  bench section times its ref-vs-vec hot path on this shape.
 
 Every generator is a pure function of its arguments (seed included), so
 scenarios are bit-reproducible across runs and machines — the property
@@ -178,12 +184,35 @@ def _long_doc(n, R, G, B, max_seq, vocab, seed, factor, c, tt) -> Scenario:
                         meta={"rate": rate, "spec": spec.name})
 
 
+def _trickle(n, R, G, B, max_seq, vocab, seed, factor, c, tt) -> Scenario:
+    """Sparse single-file arrivals, short prompts, long decode budgets:
+    at any instant only a handful of replicas are busy regardless of R,
+    so fleet-layer per-step cost is laid bare (the ``fleet_scale``
+    regime)."""
+    s_max = max(max_seq // 6, 2)
+    o_max = max(max_seq - s_max - 1, 1)
+    spec = _spec("fleet-trickle", mean=max(max_seq / 12, 2), sigma=0.6,
+                 s_min=2, s_max=s_max, decode_p=1 / 24, o_max=o_max)
+    # Unlike every other scenario the rate does NOT scale with the
+    # fleet shape: a trickle keeps at most ~one request in flight
+    # fleet-wide, so adding replicas only adds idle bookkeeping — the
+    # quantity the fleet_scale bench isolates.
+    e_o = 1.0 / spec.decode_p
+    dt = c + tt * B * (spec.mu_s + 0.5 * e_o)
+    rate = factor * 0.8 / (e_o * dt)
+    inst = poisson_trace(spec, n_requests=n, rate=rate, seed=seed)
+    return _materialize("trickle", inst, vocab_size=vocab,
+                        max_prompt=s_max, max_new=o_max, seed=seed,
+                        meta={"rate": rate, "spec": spec.name})
+
+
 SCENARIOS = {
     "steady": _steady,
     "flash_crowd": _flash_crowd,
     "diurnal": _diurnal,
     "agentic": _agentic,
     "long_doc": _long_doc,
+    "trickle": _trickle,
 }
 
 

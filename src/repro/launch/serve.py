@@ -3,11 +3,27 @@ bfio_h20`` — drives the BF-IO-routed multi-worker engine end to end.
 
 Fleet mode (``--replicas R`` with R > 1, or ``--scenario``): drives R
 engine replicas behind a fleet router (``--router round_robin |
-least_loaded | pod2 | bfio``) on a named scenario trace (``--scenario
-steady | flash_crowd | diurnal | agentic | long_doc``; omitted = the
-same synthetic stream as single-engine mode, all arriving at t=0).
-``--telemetry-out run.jsonl`` streams the telemetry subsystem's
-per-step / per-request records plus the summary to JSONL.
+least_loaded | pod2 | bfio | pod_bfio_pP``) on a named scenario trace
+(``--scenario steady | flash_crowd | diurnal | agentic | long_doc |
+trickle``; omitted = the same synthetic stream as single-engine mode,
+all arriving at t=0).  ``--telemetry-out run.jsonl`` streams the
+telemetry subsystem's per-step / per-request records plus the summary
+to JSONL.  Fleet scaling knobs:
+
+* ``--fleet-mode vec|ref`` picks the vectorized fleet hot path
+  (incrementally-updated per-replica load arrays; the default) or the
+  reference per-step O(R) re-gather loop kept for the bit-identity
+  bench gate — both produce identical stats and telemetry.
+* ``--pods P`` with P > 1 shortcuts ``--router pod_bfio_pP``:
+  two-level hierarchical routing (capacity-normalized pod pick, then
+  one batched BF-IO solve across all pods) for R in the hundreds.
+* ``--replica-classes 2xg1b2,2xg2b4`` builds a heterogeneous fleet —
+  each ``CxgGbB`` group adds C replicas with G workers x B slots
+  (overriding ``--replicas/--workers/--slots``); the router sees
+  per-replica capacity and the BF-IO tier balances load against it.
+* ``--predictor oracle`` feeds the router each request's decode budget
+  as a predicted output length (the BF-IO growth term then prices
+  decode, not just prefill).
 
 Memory-pressure knobs (``--cache-backend paged`` only):
 
@@ -27,6 +43,8 @@ Memory-pressure knobs (``--cache-backend paged`` only):
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import re
 
 import jax
 import numpy as np
@@ -40,18 +58,44 @@ from ..serving import EngineConfig, ServeRequest, ServingEngine
 from .mesh import make_cpu_mesh, make_production_mesh
 
 
+def parse_replica_classes(spec: str, engine_cfg):
+    """``"2xg1b2,2xg2b4"`` -> [(2, ec(G=1,B=2)), (2, ec(G=2,B=4))]:
+    each ``CxgGbB`` group adds C replicas with G workers x B slots,
+    inheriting every other knob from the base engine config."""
+    out = []
+    for part in spec.split(","):
+        m = re.fullmatch(r"(\d+)xg(\d+)b(\d+)", part.strip())
+        if not m:
+            raise ValueError(
+                f"bad replica class {part!r} (want e.g. '2xg1b2')")
+        count, g, b = (int(x) for x in m.groups())
+        out.append((count, dataclasses.replace(
+            engine_cfg, n_workers=g, slots_per_worker=b)))
+    return out
+
+
 def serve_fleet(args, cfg, params, engine_cfg, mesh) -> None:
     """Fleet mode: R replicas behind the router, scenario arrivals,
     telemetry export."""
+    router = args.router
+    if args.pods > 1:
+        router = f"pod_bfio_p{args.pods}"
+    classes = parse_replica_classes(args.replica_classes, engine_cfg) \
+        if args.replica_classes else None
+    n_replicas = sum(c for c, _ in classes) if classes \
+        else args.replicas
     telemetry = FleetTelemetry()
     fleet = FleetServer(cfg, params, engine_cfg,
-                        n_replicas=args.replicas, router=args.router,
+                        n_replicas=args.replicas, router=router,
                         policy=args.policy, mesh=mesh,
-                        telemetry=telemetry, seed=args.seed)
+                        telemetry=telemetry, seed=args.seed,
+                        fleet_mode=args.fleet_mode,
+                        replica_classes=classes,
+                        predictor=args.predictor)
     if args.scenario:
         sc = make_scenario(
             args.scenario, n_requests=args.requests,
-            n_replicas=args.replicas, n_workers=args.workers,
+            n_replicas=n_replicas, n_workers=args.workers,
             slots_per_worker=args.slots,
             max_seq_len=engine_cfg.max_seq_len,
             vocab_size=cfg.vocab_size, seed=args.seed)
@@ -130,7 +174,28 @@ def main() -> None:
                          "the fleet router (1 = bare engine)")
     ap.add_argument("--router", default="bfio",
                     help="fleet router: round_robin | least_loaded | "
-                         "pod2 | bfio[_hH]")
+                         "pod2 | bfio[_hH] | pod_bfio[_pP][_hH]")
+    ap.add_argument("--fleet-mode", default="vec",
+                    choices=["vec", "ref"],
+                    help="fleet hot path: vectorized per-replica load "
+                         "arrays (vec, default) or the reference O(R) "
+                         "per-step re-gather loop (ref) — stats and "
+                         "telemetry are bit-identical")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="with P > 1, route hierarchically via "
+                         "pod_bfio_pP: pick a pod by normalized load, "
+                         "then one batched BF-IO solve across all pods "
+                         "(overrides --router)")
+    ap.add_argument("--replica-classes", default=None,
+                    help="heterogeneous fleet spec, e.g. '2xg1b2,2xg2b4' "
+                         "= 2 replicas of 1 worker x 2 slots + 2 of "
+                         "2 x 4 (overrides --replicas/--workers/--slots "
+                         "for the fleet shape)")
+    ap.add_argument("--predictor", default=None,
+                    choices=["oracle"],
+                    help="predicted-output-length router term: 'oracle' "
+                         "feeds each request's decode budget to the "
+                         "BF-IO growth model")
     ap.add_argument("--scenario", default=None,
                     choices=sorted(FLEET_SCENARIOS),
                     help="named scenario trace for fleet mode (timed "
@@ -157,7 +222,8 @@ def main() -> None:
         preemption_mode=args.preemption_mode,
         preemption_policy=args.preemption_policy,
         prefix_cache=args.prefix_cache)
-    if args.replicas > 1 or args.scenario or args.telemetry_out:
+    if (args.replicas > 1 or args.scenario or args.telemetry_out
+            or args.replica_classes or args.pods > 1):
         serve_fleet(args, cfg, params, engine_cfg, mesh)
         return
     eng = ServingEngine(cfg, params, engine_cfg,

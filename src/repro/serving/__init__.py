@@ -3,7 +3,12 @@ load balancing (the paper's system, runnable), pluggable cache backends
 (contiguous slots / vLLM-style paged KV with prefix caching), the
 admission scheduler with chunked prefill and preemption under memory
 pressure, and the device-side routed serving loop."""
-from .engine import EngineConfig, ServeRequest, ServingEngine  # noqa: F401
+from .engine import (  # noqa: F401
+    EngineConfig,
+    LoadSnapshot,
+    ServeRequest,
+    ServingEngine,
+)
 from .cache_backend import (  # noqa: F401
     CacheBackend,
     PagedCacheBackend,

@@ -126,6 +126,29 @@ def _jitted_chunk_prefill(cfg: ModelConfig, mesh):
     return jax.jit(f, donate_argnums=(1,))
 
 
+def _install_impl(cache, mini, src, dst):
+    """Copy rows ``src`` of the prefill mini cache into slots ``dst`` of
+    the flat cache — one fused program instead of eager per-leaf
+    gather/scatter (which dominated request admission cost).  Cache
+    leaves are stacked (layers, batch, ...) except 'lengths' (batch is
+    dim 0); the mini cache may carry a shorter kv-length dim (prefill
+    pad), zero-padded up to the flat cache's."""
+    def copy(dst_leaf, src_leaf):
+        if dst_leaf.ndim == 1:       # lengths
+            return dst_leaf.at[dst].set(src_leaf[src].astype(dst_leaf.dtype))
+        s = src_leaf[:, src]
+        tail = dst_leaf.shape[2:]
+        if s.shape[2:] != tail:
+            pads = [(0, 0), (0, 0)] + [
+                (0, tail[i] - s.shape[2 + i]) for i in range(len(tail))]
+            s = jnp.pad(s, pads)
+        return dst_leaf.at[:, dst].set(s.astype(dst_leaf.dtype))
+    return jax.tree.map(copy, cache, mini)
+
+
+_INSTALL = jax.jit(_install_impl, donate_argnums=(0,))
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_paged_decode(cfg: ModelConfig, mesh, block_size: int,
                          attn_impl: str):
@@ -220,53 +243,39 @@ class SlotCacheBackend(CacheBackend):
             a.nbytes for a in jax.tree.leaves(self.cache)))
 
     def write_prefill(self, mini_cache, src, dst, tokens=None) -> None:
-        """ONE gather + scatter per cache leaf for the whole admitted
-        batch.  Cache leaves are stacked (layers, batch, ...): batch is
-        dim 1, except 'lengths' (batch is dim 0).  ``tokens`` is unused
-        (the contiguous layout is not content-addressed)."""
-        src = jnp.asarray(src, jnp.int32)
-        dst = jnp.asarray(dst, jnp.int32)
-
-        def copy(dst_leaf, src_leaf):
-            if dst_leaf.ndim == 1:       # lengths
-                return dst_leaf.at[dst].set(
-                    src_leaf[src].astype(dst_leaf.dtype))
-            s = src_leaf[:, src]
-            if s.shape[0] != dst_leaf.shape[0]:
-                raise ValueError("layer-count mismatch")
-            tail = dst_leaf.shape[2:]
-            if s.shape[2:] != tail:
-                # mini cache may carry a shorter kv-length dim (prefill pad)
-                pads = [(0, 0), (0, 0)] + [
-                    (0, tail[i] - s.shape[2 + i]) for i in range(len(tail))]
-                s = jnp.pad(s, pads)
-            return dst_leaf.at[:, dst].set(s.astype(dst_leaf.dtype))
-
-        self.cache = jax.tree.map(copy, self.cache, mini_cache)
+        """One fused jitted gather/scatter over the whole admitted batch
+        and all cache leaves (see :func:`_install_impl`; the old cache is
+        donated).  ``tokens`` is unused (the contiguous layout is not
+        content-addressed)."""
+        self.cache = _INSTALL(self.cache, mini_cache,
+                              jnp.asarray(src, jnp.int32),
+                              jnp.asarray(dst, jnp.int32))
 
     def prefill_chunk(self, toks, offs, clens, slots) -> np.ndarray:
         idx = np.maximum(slots, 0).astype(np.int32)
         dst = np.where(slots >= 0, slots, self.N).astype(np.int32)
         logits, self.cache = self._chunk(
-            self.params, self.cache, jnp.asarray(toks, jnp.int32),
-            jnp.asarray(offs, jnp.int32), jnp.asarray(clens, jnp.int32),
-            jnp.asarray(idx), jnp.asarray(dst))
+            self.params, self.cache, np.asarray(toks, np.int32),
+            np.asarray(offs, np.int32), np.asarray(clens, np.int32),
+            idx, dst)
         return np.asarray(logits)
 
     def decode(self, slot_tokens, active_idx, bucket) -> np.ndarray:
+        # numpy args go straight into the jitted calls: the jit dispatch
+        # fastpath converts them far cheaper than an eager jnp.asarray
+        # per array (which dominated small-model decode steps), and
+        # dtype canonicalization is identical either way.
         n = active_idx.size
         if bucket >= self.N:
             nxt_all, self.cache = self._decode_full(
-                self.params, self.cache, jnp.asarray(slot_tokens))
+                self.params, self.cache, slot_tokens)
             return np.asarray(nxt_all)[active_idx]
         idx = np.zeros(bucket, dtype=np.int32)
         idx[:n] = active_idx
         dst = np.full(bucket, self.N, dtype=np.int32)  # pads: dropped
         dst[:n] = active_idx
         nxt_sub, self.cache = self._decode_compact(
-            self.params, self.cache,
-            jnp.asarray(slot_tokens[idx]),
-            jnp.asarray(idx), jnp.asarray(dst))
+            self.params, self.cache, slot_tokens[idx], idx, dst)
         return np.asarray(nxt_sub)[:n]
 
     def release(self, slots) -> None:

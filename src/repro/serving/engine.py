@@ -184,6 +184,36 @@ def _decode_buckets(N: int) -> list[int]:
     return sorted(buckets)
 
 
+@dataclasses.dataclass(frozen=True)
+class LoadSnapshot:
+    """One engine's load state as seen by a fleet router — the public
+    seam between :class:`ServingEngine` and the fleet layer, so routing
+    and per-step fleet bookkeeping never reach into engine internals
+    (``_loads()``, ``_req_cost()``, ``scheduler.wait``)."""
+
+    resident_load: float   # sum of per-worker resident KV loads
+    wait_cost: float       # summed prefill-size proxy of waiting requests
+    active: int            # occupied slots
+    waiting: int           # requests queued at this engine
+    free_slots: int        # N - active
+    tokens_out: int        # cumulative generated tokens
+    preemptions: int       # cumulative preemption count
+    prefix_hits: int       # cumulative prefix-cache hits
+
+    @property
+    def committed_load(self) -> float:
+        """Resident plus queued load — what a router should balance."""
+        return self.resident_load + self.wait_cost
+
+    @property
+    def committed_count(self) -> int:
+        return self.active + self.waiting
+
+    @property
+    def busy(self) -> bool:
+        return self.active > 0 or self.waiting > 0
+
+
 class ServingEngine:
     """Continuous-batching decode engine over G logical workers."""
 
@@ -316,6 +346,25 @@ class ServingEngine:
             if r is not None:
                 counts[self._worker_of(s)] += 1
         return counts
+
+    def load_snapshot(self) -> LoadSnapshot:
+        """Cheap public summary of this engine's load state (see
+        :class:`LoadSnapshot`).  Both fleet modes route and account from
+        these values, which keeps ``fleet_mode="ref"`` and ``"vec"``
+        bit-identical: identical inputs feed identical arithmetic."""
+        wait = self.wait
+        active = int(self.table.active.sum())
+        prefix = getattr(self.backend, "prefix", None)
+        return LoadSnapshot(
+            resident_load=float(self._loads().sum()),
+            wait_cost=float(sum(self._req_cost(r) for r in wait)),
+            active=active,
+            waiting=len(wait),
+            free_slots=self.N - active,
+            tokens_out=self.tokens_out,
+            preemptions=self.preemptions,
+            prefix_hits=prefix.hits if prefix is not None else 0,
+        )
 
     # ------------------------------------------------------------------
     def _admit_tokens(self, r: "ServeRequest") -> np.ndarray:

@@ -18,7 +18,8 @@ def test_smoke_schema_and_finite_timings():
     check(doc2)
     sections = {r["section"] for r in doc2["rows"]}
     assert sections == {"solver", "simulator", "batch", "engine",
-                        "engine_paged", "engine_preempt", "fleet"}
+                        "engine_paged", "engine_preempt", "fleet",
+                        "fleet_scale"}
     kinds = {r.get("kind") for r in doc2["rows"]
              if r["section"] == "engine_paged"}
     assert kinds == {"grid", "stall"}
@@ -28,6 +29,9 @@ def test_smoke_schema_and_finite_timings():
     fleet_kinds = {r.get("kind") for r in doc2["rows"]
                    if r["section"] == "fleet"}
     assert fleet_kinds == {"scenario", "parity"}
+    fscale_kinds = {r.get("kind") for r in doc2["rows"]
+                    if r["section"] == "fleet_scale"}
+    assert fscale_kinds == {"speedup", "pod"}
 
 
 def test_sections_filter():

@@ -355,3 +355,241 @@ class TestTelemetry:
         from repro.fleet import percentiles
         assert percentiles([]) == {"p50": None, "p95": None, "p99": None}
         assert percentiles([None, float("nan")])["p95"] is None
+
+# ----------------------------------------------------------------------
+# fleet_mode="ref" vs "vec" parity (the fleet_scale tentpole gate)
+# ----------------------------------------------------------------------
+
+def _run_both_modes(params, mesh, ec, sc, router, *, R=None,
+                    replica_classes=None, predictor=None, seed=0):
+    """Run the same scenario under both fleet modes; return
+    {mode: (stats, telemetry)}."""
+    out = {}
+    for mode in ("ref", "vec"):
+        tel = FleetTelemetry()
+        fs = FleetServer(CFG, params, ec, n_replicas=R or 1,
+                         router=router, policy="bfio_h0", mesh=mesh,
+                         telemetry=tel, seed=seed, fleet_mode=mode,
+                         replica_classes=replica_classes,
+                         predictor=predictor)
+        fs.submit_scenario(sc)
+        out[mode] = (fs.run(), tel)
+    return out
+
+
+def _assert_modes_equal(out):
+    s_ref, t_ref = out["ref"]
+    s_vec, t_vec = out["vec"]
+    assert s_ref == s_vec
+    assert t_ref.steps == t_vec.steps
+    assert t_ref.requests == t_vec.requests
+    assert t_ref.summary() == t_vec.summary()
+
+
+class TestFleetModeParity:
+    PARITY_ROUTERS = ROUTERS + ("pod_bfio_p2",)
+
+    @pytest.mark.parametrize("router", PARITY_ROUTERS)
+    @pytest.mark.parametrize("R", (1, 8, 64))
+    def test_ref_vec_bit_identical(self, setup, router, R):
+        params, mesh = setup
+        ec = EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=48)
+        sc = make_scenario("trickle", n_requests=8 if R >= 64 else 14,
+                           n_replicas=R, n_workers=1, slots_per_worker=2,
+                           max_seq_len=48, seed=3,
+                           step_overhead=1e-3, t_token=2e-4)
+        out = _run_both_modes(params, mesh, ec, sc, router, R=R)
+        _assert_modes_equal(out)
+        assert out["vec"][0]["failed"] == 0
+        assert out["vec"][0]["completed"] == sc.n_requests
+
+    def test_rejects_bad_mode(self, setup):
+        params, mesh = setup
+        with pytest.raises(ValueError, match="fleet_mode"):
+            FleetServer(CFG, params, EngineConfig(), n_replicas=1,
+                        router="bfio", mesh=mesh, fleet_mode="fast")
+
+
+# ----------------------------------------------------------------------
+# Hierarchical pod routing (unit level)
+# ----------------------------------------------------------------------
+
+class TestPodRouting:
+    def test_single_pod_matches_flat_bfio(self):
+        from repro.fleet import BFIORouter, PodBFIORouter
+        ctx = _ctx([3.0, 1.0, 4.0, 1.5], [2, 1, 3, 1],
+                   [5, 9, 2, 6, 3, 7, 1])
+        flat = BFIORouter().route(ctx)
+        pod = PodBFIORouter(pods=1).route(ctx)
+        assert np.array_equal(flat, pod)
+
+    def test_pod_boundaries_respected(self):
+        """Level 1 steers the whole batch to the lighter pod; level 2
+        never places outside it."""
+        from repro.fleet import PodBFIORouter
+        ctx = _ctx([0.0, 0.0, 100.0, 100.0], [0, 0, 8, 8], [1, 1, 1, 1])
+        out = PodBFIORouter(pods=2).route(ctx)
+        assert set(out.tolist()) <= {0, 1}
+
+    def test_uneven_pod_sizes(self):
+        """R % pods != 0: contiguous pods of size ceil/floor, every
+        assignment in range, both pods used under symmetric load."""
+        from repro.fleet import PodBFIORouter
+        r = PodBFIORouter(pods=2)
+        ctx = _ctx([0.0] * 5, [0] * 5, [4.0] * 10)
+        out = r.route(ctx)
+        assert out.shape == (10,)
+        assert ((out >= 0) & (out < 5)).all()
+        assert set(out.tolist()) & {0, 1, 2}      # pod 0 = replicas 0-2
+        assert set(out.tolist()) & {3, 4}         # pod 1 = replicas 3-4
+        out2 = PodBFIORouter(pods=2).route(
+            _ctx([0.0] * 5, [0] * 5, [4.0] * 10))
+        assert np.array_equal(out, out2)          # deterministic
+
+    def test_empty_candidates(self):
+        from repro.fleet import PodBFIORouter
+        out = PodBFIORouter(pods=2).route(_ctx([0.0, 0.0], [0, 0], []))
+        assert out.shape == (0,)
+
+    def test_capacity_normalized_level1(self):
+        """A pod with double capacity absorbs proportionally more of a
+        burst than its equal-loaded half-capacity sibling."""
+        from repro.fleet import PodBFIORouter
+        ctx = _ctx([0.0, 0.0], [0, 0], [1.0] * 12)
+        ctx.capacity = np.array([4.0, 1.0])
+        out = PodBFIORouter(pods=2).route(ctx)
+        n0 = int((out == 0).sum())
+        assert n0 > 12 - n0
+
+    def test_make_router_parses_pod_bfio(self):
+        from repro.fleet import PodBFIORouter, PowerOfDRouter
+        r = make_router("pod_bfio_p16")
+        assert isinstance(r, PodBFIORouter) and r.pods == 16
+        r = make_router("pod_bfio_p8_h2")
+        assert r.pods == 8 and r.H == 2
+        assert r.name == "pod_bfio_p8_h2"
+        assert make_router("pod_bfio").pods == 4       # default
+        assert isinstance(make_router("pod2"), PowerOfDRouter)
+        with pytest.raises(ValueError, match="pod_bfio suffix"):
+            make_router("pod_bfio_x3")
+        with pytest.raises(ValueError, match="pods"):
+            make_router("pod_bfio_p0")
+
+
+# ----------------------------------------------------------------------
+# step() waiting count + telemetry deltas (regressions)
+# ----------------------------------------------------------------------
+
+class TestStepAccounting:
+    @pytest.mark.parametrize("mode", ("ref", "vec"))
+    def test_waiting_includes_replica_backlog(self, setup, mode):
+        """step()['waiting'] must count the routed-but-unadmitted
+        backlog queued at the replicas, not just fleet-pending arrivals
+        (the old field was always 0 right after routing)."""
+        params, mesh = setup
+        ec = EngineConfig(n_workers=1, slots_per_worker=1, max_seq_len=64)
+        fs = FleetServer(CFG, params, ec, n_replicas=1,
+                         router="round_robin", policy="fcfs", mesh=mesh,
+                         fleet_mode=mode)
+        for i in range(5):
+            fs.submit(ServeRequest(rid=i, tokens=np.arange(1, 9),
+                                   max_new_tokens=4))
+        info = fs.step()
+        # 1 admitted into the single slot, 4 queued at the replica
+        assert info["waiting"] == 4
+        assert info["replica_waiting"] == [4]
+        fs.run()
+
+    @pytest.mark.parametrize("mode", ("ref", "vec"))
+    def test_step_rows_carry_deltas_not_totals(self, setup, mode):
+        """Per-step telemetry preemptions/prefix_hits are deltas: their
+        sum equals the run total (feeding cumulative totals per row made
+        the sum quadratically larger)."""
+        params, mesh = setup
+        ec = EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=64,
+                          cache_backend="paged", paged_block_size=8,
+                          prefix_cache=True)
+        tel = FleetTelemetry()
+        fs = FleetServer(CFG, params, ec, n_replicas=2, router="bfio",
+                         policy="bfio_h0", mesh=mesh, telemetry=tel,
+                         seed=0, fleet_mode=mode)
+        sc = make_scenario("agentic", n_requests=12, n_replicas=2,
+                           n_workers=1, slots_per_worker=2,
+                           max_seq_len=64, seed=1)
+        fs.submit_scenario(sc)
+        stats = fs.run()
+        assert stats["prefix_hits"] > 0
+        assert sum(s["prefix_hits"] for s in tel.steps) \
+            == stats["prefix_hits"]
+        assert sum(s["preemptions"] for s in tel.steps) \
+            == stats["preemptions"]
+        assert all(s["prefix_hits"] >= 0 and s["preemptions"] >= 0
+                   for s in tel.steps)
+        assert tel.summary()["prefix_hits"] == stats["prefix_hits"]
+
+
+# ----------------------------------------------------------------------
+# Heterogeneous replica classes + predicted-output routing
+# ----------------------------------------------------------------------
+
+class TestHeterogeneousFleet:
+    def test_replica_classes_expand_in_order(self, setup):
+        params, mesh = setup
+        small = EngineConfig(n_workers=1, slots_per_worker=1,
+                             max_seq_len=48)
+        big = EngineConfig(n_workers=2, slots_per_worker=2,
+                           max_seq_len=48)
+        sc = make_scenario("trickle", n_requests=10, n_replicas=3,
+                           n_workers=1, slots_per_worker=2,
+                           max_seq_len=48, seed=2)
+        out = _run_both_modes(params, mesh, small, sc, "pod_bfio_p2",
+                              replica_classes=[(1, small), (2, big)])
+        _assert_modes_equal(out)
+        stats = out["vec"][0]
+        assert stats["n_replicas"] == 3
+        assert stats["completed"] == 10 and stats["failed"] == 0
+        fs = FleetServer(CFG, params, small, mesh=mesh,
+                         replica_classes=[(1, small), (2, big)])
+        assert fs._capacity.tolist() == [1.0, 4.0, 4.0]
+        assert [e.N for e in fs.engines] == [1, 4, 4]
+
+    def test_replica_classes_validated(self, setup):
+        params, mesh = setup
+        with pytest.raises(ValueError, match="count"):
+            FleetServer(CFG, params, EngineConfig(), mesh=mesh,
+                        replica_classes=[(0, EngineConfig())])
+        with pytest.raises(ValueError, match="empty"):
+            FleetServer(CFG, params, EngineConfig(), mesh=mesh,
+                        replica_classes=[])
+
+    def test_pred_weight_augments_sizes(self):
+        from repro.fleet import BFIORouter
+        ctx = _ctx([0.0, 0.0], [0, 0], [10.0, 10.0, 10.0])
+        ctx.pred_out = np.array([100.0, 0.0, 0.0])
+        plain = BFIORouter()._sizes(ctx)
+        assert plain.tolist() == [10.0, 10.0, 10.0]
+        weighted = BFIORouter(pred_weight=0.5)._sizes(ctx)
+        assert weighted.tolist() == [60.0, 10.0, 10.0]
+        # no predictor in the context -> weight is inert
+        ctx.pred_out = None
+        assert BFIORouter(pred_weight=0.5)._sizes(ctx).tolist() \
+            == [10.0, 10.0, 10.0]
+
+    def test_oracle_predictor_end_to_end(self, setup):
+        from repro.fleet import BFIORouter
+        params, mesh = setup
+        ec = EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=48)
+        sc = make_scenario("trickle", n_requests=10, n_replicas=2,
+                           n_workers=1, slots_per_worker=2,
+                           max_seq_len=48, seed=5)
+        out = _run_both_modes(params, mesh, ec, sc,
+                              BFIORouter(pred_weight=0.5), R=2,
+                              predictor="oracle")
+        _assert_modes_equal(out)
+        assert out["vec"][0]["completed"] == 10
+
+    def test_rejects_bad_predictor(self, setup):
+        params, mesh = setup
+        with pytest.raises(ValueError, match="predictor"):
+            FleetServer(CFG, params, EngineConfig(), n_replicas=1,
+                        mesh=mesh, predictor="psychic")
