@@ -1,0 +1,120 @@
+"""Contract-aware static analysis for the ref/vec serving stack.
+
+``python -m repro.analysis src/`` runs four AST/flow passes over the
+tree — no imports of the analyzed code — and fails (exit 1) on any
+finding not covered by an inline suppression or the committed
+baseline.  Tier-1 runs it via ``tests/test_analysis.py``, so the
+contracts below are enforced on every commit, not by reviewer memory.
+
+Code families
+=============
+
+* **RA1xx — jit hazards** (:mod:`repro.analysis.jit_hazards`):
+  RA101 host sync (``float()``/``np.asarray``/``.item()`` on a traced
+  value), RA102 data-dependent Python branch on a traced value, RA103
+  unhashable default for a static jit arg, RA104 eager ``jnp.*`` op in
+  a registered host accounting path.
+* **RA2xx — allocator discipline** (:mod:`repro.analysis.allocator`):
+  RA201 discarded ``alloc()`` result, RA202 release-path method with
+  no release call, RA203 pool growth with no demand declaration in the
+  class, RA204 raw mutation of pool internals outside the owning
+  module, RA205 ``add_ref`` followed by a fallible ``alloc`` with no
+  cleanup.
+* **RA3xx — barrier scope** (:mod:`repro.analysis.barrier`): RA301
+  step-scoped state written outside the declared ``step()``-rooted
+  call graph, RA302 vec-path engine mutation with no ``_refresh``
+  afterwards (stale snapshot).
+* **RA4xx — ref/vec parity surface** (:mod:`repro.analysis.parity`):
+  RA401 config field consumed by one side of a declared ref/vec pair
+  only, RA402 any other one-sided surface item (attribute, callee
+  keyword, string key).
+
+Suppressions and baseline
+=========================
+
+A finding on a line carrying ``# ra: ignore[RA204]`` (or a bare
+``# ra: ignore``) is suppressed; use this where the violation is
+intentional and locally explainable.  Everything else must be fixed or
+admitted to ``tools/analysis_baseline.json`` — regenerate with
+``python -m repro.analysis src/ --write-baseline
+tools/analysis_baseline.json``.  Baseline entries match by
+``(code, path, enclosing symbol)`` with a count, so line drift never
+invalidates them, while a *new* finding in an already-baselined symbol
+still fails.  Stale entries are reported informationally and should be
+pruned when the underlying finding is fixed.
+
+Repo-specific contracts (which attributes are step-scoped, which
+function pairs are ref/vec seams, what counts as a pool root) live in
+:mod:`repro.analysis.registry` as data; the passes are generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Optional
+
+from . import allocator, barrier, jit_hazards, parity
+from .astutil import SourceFile, iter_source_files
+from .findings import Baseline, Finding, apply_baseline
+from .registry import DEFAULT_REGISTRY, Registry
+
+__all__ = ["run_analysis", "AnalysisResult", "Baseline", "Finding",
+           "Registry", "DEFAULT_REGISTRY", "PASSES"]
+
+PASSES = (
+    ("jit_hazards", jit_hazards.run),
+    ("allocator", allocator.run),
+    ("barrier", barrier.run),
+    ("parity", parity.run),
+)
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: list        # post-suppression, pre-baseline
+    new: list             # findings not absorbed by the baseline
+    stale: list           # baseline keys with unused allowance
+    files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+
+def _scan_file(sf: SourceFile, registry: Registry,
+               select: Optional[set]) -> list[Finding]:
+    found: list[Finding] = []
+    for _, pass_fn in PASSES:
+        for f in pass_fn(sf, registry):
+            if select and f.code not in select:
+                continue
+            if sf.suppressions.suppressed(f.line, f.code):
+                continue
+            found.append(f)
+    return found
+
+
+def run_analysis(paths, rel_to=None, registry: Registry = None,
+                 baseline: Optional[Baseline] = None,
+                 select: Optional[set] = None) -> AnalysisResult:
+    """Run every pass over ``paths`` (files or directories).
+
+    ``rel_to`` anchors the relative paths findings/baselines use
+    (default: each path's parent for files, the path itself for
+    directories — so scanning ``src/`` yields ``repro/...`` paths).
+    """
+    registry = registry or DEFAULT_REGISTRY
+    findings: list[Finding] = []
+    files = 0
+    for p in paths:
+        p = Path(p)
+        anchor = Path(rel_to) if rel_to else (
+            p if p.is_dir() else p.parent)
+        for sf in iter_source_files(p, anchor):
+            files += 1
+            findings.extend(_scan_file(sf, registry, select))
+    findings.sort()
+    if baseline is None:
+        return AnalysisResult(findings, list(findings), [], files)
+    new, stale = apply_baseline(findings, baseline)
+    return AnalysisResult(findings, new, stale, files)

@@ -1,0 +1,100 @@
+"""CLI driver: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (against the baseline, if given), 1 findings,
+2 usage error.  ``--write-baseline`` records the current findings and
+exits 0 so the workflow is: run, triage, fix what's real, suppress
+what's intentional, baseline the long tail.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import run_analysis
+from .findings import Baseline
+
+_KNOWN_CODES = {
+    "RA101", "RA102", "RA103", "RA104",
+    "RA201", "RA202", "RA203", "RA204", "RA205",
+    "RA301", "RA302",
+    "RA401", "RA402",
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Contract-aware static analysis for the ref/vec "
+                    "serving stack (see repro.analysis docstring for "
+                    "the RA code families).")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to scan")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON; only findings "
+                         "beyond it fail")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write current findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated RA codes to run "
+                         "(default: all)")
+    ap.add_argument("--rel-to", default=None,
+                    help="anchor for relative finding paths "
+                         "(default: each scanned directory)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line")
+    args = ap.parse_args(argv)
+
+    select = None
+    if args.select:
+        select = {c.strip().upper() for c in args.select.split(",")
+                  if c.strip()}
+        bad = select - _KNOWN_CODES
+        if bad:
+            print(f"error: unknown code(s) {', '.join(sorted(bad))}; "
+                  f"known: {', '.join(sorted(_KNOWN_CODES))}",
+                  file=sys.stderr)
+            return 2
+
+    baseline = None
+    if args.baseline and not args.write_baseline:
+        try:
+            baseline = Baseline.load(args.baseline)
+        except FileNotFoundError:
+            print(f"error: baseline {args.baseline} not found "
+                  "(--write-baseline to create it)", file=sys.stderr)
+            return 2
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+
+    try:
+        result = run_analysis(args.paths, rel_to=args.rel_to,
+                              baseline=baseline, select=select)
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        Baseline.from_findings(result.findings).save(
+            args.write_baseline)
+        if not args.quiet:
+            print(f"wrote {len(result.findings)} finding(s) to "
+                  f"{args.write_baseline}")
+        return 0
+
+    for f in result.new:
+        print(f.format())
+    for key in result.stale:
+        code, path, symbol = key
+        print(f"note: stale baseline entry {code} {path} [{symbol}] "
+              "— finding fixed, prune it", file=sys.stderr)
+    if not args.quiet:
+        print(f"{len(result.new)} new finding(s), "
+              f"{len(result.findings)} total, "
+              f"{result.files} file(s) scanned", file=sys.stderr)
+    return 1 if result.new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

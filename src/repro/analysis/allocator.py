@@ -1,0 +1,237 @@
+"""RA2xx — paged-KV allocator discipline.
+
+The paged pool (PR 4) is refcounted and demand-driven: blocks obtained
+from :class:`BlockAllocator` must be released on every exit path,
+capacity growth must be pre-declared so admission control can price it,
+and nobody outside the owning module may poke pool internals directly
+— the ref/vec bit-identity gates assume the pool's bookkeeping arrays
+only change through its API.
+
+Codes:
+
+* **RA201** — an ``alloc()`` / ``add_ref()`` call whose result is
+  discarded (bare expression): the caller can never free what it
+  obtained.  (``add_ref`` returns the block id for symmetry; dropping
+  it is fine only in a loop over already-tracked blocks, which is the
+  suppression case.)
+* **RA202** — a release-path method (``release`` / ``free`` /
+  ``_free`` / ``discard``) of a pool-holding class that performs no
+  release call on any path: the canonical leak shape when a refactor
+  drops the ``kv.release`` line.
+* **RA203** — a pool-holding class calls growth APIs
+  (``append_tokens`` / ``ensure_capacity``) but never declares demand
+  (``append_demand`` / ``decode_block_demand`` / ``chunk_block_demand``)
+  anywhere in the class — admission control can no longer see the
+  growth coming.
+* **RA204** — raw write *through* a pool object (``self.kv.lengths[s]
+  = n``) outside the module that defines the pool classes.  Functional
+  leaves (``k_pool`` / ``v_pool`` — jax arrays updated by replacement)
+  are exempt.
+* **RA205** — ``add_ref`` acquisitions followed by a fallible
+  ``alloc`` with no cleanup handler: if the alloc raises Out-of-blocks
+  the refs taken so far leak.  A ``try`` around the alloc whose
+  handler releases makes it clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .astutil import FunctionInfo, SourceFile, attr_parts
+from .findings import Finding
+from .registry import Registry
+
+__all__ = ["run"]
+
+_POOL_CLASSES = {"BlockAllocator", "PagedKVCache"}
+_RELEASE_METHOD_NAMES = {"release", "free", "_free", "discard"}
+_RELEASE_VERBS = {"release", "free", "_free", "discard", "pop"}
+_GROWTH_VERBS = {"append_tokens", "ensure_capacity"}
+_DEMAND_VERBS = {"append_demand", "decode_block_demand",
+                 "chunk_block_demand"}
+_ACQUIRE_VERBS = {"alloc", "allocate", "add_ref"}
+
+
+def _is_owner_module(sf: SourceFile) -> bool:
+    return bool(_POOL_CLASSES & sf.classes.keys())
+
+
+def _chain_verb(call: ast.Call) -> tuple[Optional[list[str]], str]:
+    parts = attr_parts(call.func)
+    if not parts or len(parts) < 2:
+        return None, ""
+    return parts, parts[-1]
+
+
+def _touches_pool(parts: list[str], registry: Registry) -> bool:
+    """Does the call chain pass through a pool-rooted attribute
+    (``self.kv.release`` / ``self.backend.kv.alloc`` /
+    ``self.allocator.free``)?"""
+    return any(p in registry.pool_roots for p in parts[:-1])
+
+
+def _class_pool_bound(sf: SourceFile, cls: str,
+                      registry: Registry) -> bool:
+    """Does any method of ``cls`` reach through a pool root?"""
+    for fi in sf.methods_of(cls).values():
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Attribute):
+                parts = attr_parts(node)
+                if parts and any(p in registry.pool_roots
+                                 for p in parts[1:]):
+                    return True
+    return False
+
+
+def _check_discarded_acquire(sf: SourceFile, fi: FunctionInfo,
+                             registry: Registry,
+                             out: list[Finding]) -> None:
+    for node in ast.walk(fi.node):
+        if not (isinstance(node, ast.Expr)
+                and isinstance(node.value, ast.Call)):
+            continue
+        parts, verb = _chain_verb(node.value)
+        if parts and verb in {"alloc", "allocate"} \
+                and _touches_pool(parts, registry):
+            out.append(Finding(
+                sf.relpath, node.lineno, "RA201",
+                sf.symbol_at(node.lineno),
+                f"result of {'.'.join(parts)}() discarded — the "
+                "allocated blocks can never be freed"))
+
+
+def _has_release(fi: FunctionInfo, registry: Registry) -> bool:
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            parts, verb = _chain_verb(node)
+            if parts and verb in _RELEASE_VERBS and (
+                    _touches_pool(parts, registry)
+                    or parts[0] == "self"):
+                return True
+    return False
+
+
+def _check_release_contract(sf: SourceFile, cls: str,
+                            registry: Registry,
+                            out: list[Finding]) -> None:
+    for name, fi in sf.methods_of(cls).items():
+        if name not in _RELEASE_METHOD_NAMES:
+            continue
+        if sf.suppressions.suppressed(fi.node.lineno, "RA202"):
+            continue
+        if not _has_release(fi, registry):
+            out.append(Finding(
+                sf.relpath, fi.node.lineno, "RA202",
+                fi.qualname,
+                f"release-path method {cls}.{name} performs no "
+                "release/free call on the pool — acquired blocks "
+                "leak when this path runs"))
+
+
+def _check_demand_contract(sf: SourceFile, cls: str,
+                           registry: Registry,
+                           out: list[Finding]) -> None:
+    growth_sites: list[tuple[int, str, str]] = []
+    declares = False
+    for fi in sf.methods_of(cls).values():
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            parts, verb = _chain_verb(node)
+            if not parts:
+                continue
+            if verb in _DEMAND_VERBS:
+                declares = True
+            elif verb in _GROWTH_VERBS and _touches_pool(parts,
+                                                         registry):
+                growth_sites.append(
+                    (node.lineno, ".".join(parts), fi.qualname))
+    if growth_sites and not declares:
+        for line, chain, qual in growth_sites:
+            if sf.suppressions.suppressed(line, "RA203"):
+                continue
+            out.append(Finding(
+                sf.relpath, line, "RA203", sf.symbol_at(line),
+                f"{chain}() grows the pool but {cls} never declares "
+                "demand (append_demand/decode_block_demand/"
+                "chunk_block_demand) — admission control cannot "
+                "price the growth"))
+
+
+def _check_raw_mutation(sf: SourceFile, registry: Registry,
+                        out: list[Finding]) -> None:
+    if _is_owner_module(sf):
+        return
+    for node in ast.walk(sf.tree):
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = node.targets
+        for t in targets:
+            parts = attr_parts(t)
+            if not parts or len(parts) < 2:
+                continue
+            # writing *through* a pool root (root not the final leaf)
+            if not any(p in registry.pool_roots for p in parts[:-1]):
+                continue
+            if parts[-1] in registry.pool_functional_leaves:
+                continue
+            out.append(Finding(
+                sf.relpath, t.lineno, "RA204",
+                sf.symbol_at(t.lineno),
+                f"raw mutation of pool internals: {'.'.join(parts)} "
+                "written outside the pool's owning module — use the "
+                "pool API so refcounts/demand stay consistent"))
+
+
+def _check_leaky_admit(sf: SourceFile, fi: FunctionInfo,
+                       registry: Registry,
+                       out: list[Finding]) -> None:
+    add_ref_lines: list[int] = []
+    guarded: set[int] = set()          # alloc lines with cleanup
+    allocs: list[tuple[int, str]] = []
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Try):
+            handler_frees = any(
+                isinstance(n, ast.Call)
+                and _chain_verb(n)[1] in _RELEASE_VERBS
+                for h in node.handlers for n in ast.walk(h))
+            if handler_frees:
+                for n in ast.walk(node):
+                    if isinstance(n, ast.Call) \
+                            and _chain_verb(n)[1] in {"alloc",
+                                                      "allocate"}:
+                        guarded.add(n.lineno)
+        if isinstance(node, ast.Call):
+            parts, verb = _chain_verb(node)
+            if not (parts and _touches_pool(parts, registry)):
+                continue
+            if verb == "add_ref":
+                add_ref_lines.append(node.lineno)
+            elif verb in {"alloc", "allocate"}:
+                allocs.append((node.lineno, ".".join(parts)))
+    for line, chain in allocs:
+        prior = [r for r in add_ref_lines if r < line]
+        if prior and line not in guarded:
+            out.append(Finding(
+                sf.relpath, line, "RA205", sf.symbol_at(line),
+                f"{chain}() can raise after add_ref at line "
+                f"{prior[-1]} — on failure the added refs leak; "
+                "wrap the alloc and roll the refs back"))
+
+
+def run(sf: SourceFile, registry: Registry) -> list[Finding]:
+    out: list[Finding] = []
+    _check_raw_mutation(sf, registry, out)
+    pool_classes = [c for c in sf.classes
+                    if _class_pool_bound(sf, c, registry)]
+    for cls in pool_classes:
+        _check_release_contract(sf, cls, registry, out)
+        _check_demand_contract(sf, cls, registry, out)
+    for fi in sf.functions:
+        _check_discarded_acquire(sf, fi, registry, out)
+        _check_leaky_admit(sf, fi, registry, out)
+    return out

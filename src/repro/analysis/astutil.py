@@ -1,0 +1,194 @@
+"""Shared AST machinery for the analysis passes.
+
+Everything here is deliberately *syntactic*: the passes run on any
+checkout (including broken ones) without importing the code under
+analysis, so resolution is name-based — dotted chains, same-module /
+same-class call graphs, and a light forward taint over function bodies.
+The passes accept the imprecision and rely on the suppression/baseline
+machinery (:mod:`repro.analysis.findings`) for the residue.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Iterator, Optional
+
+from .findings import Suppressions
+
+__all__ = ["SourceFile", "FunctionInfo", "iter_source_files", "dotted",
+           "attr_parts", "call_args", "name_loads", "FuncIndex"]
+
+
+@dataclasses.dataclass(eq=False)      # identity hash — nodes are unique
+class FunctionInfo:
+    """One function/method definition (lambdas included)."""
+
+    qualname: str                 # "Cls.method", "func", "func.<locals>.g"
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef | Lambda
+    cls: Optional[str]            # enclosing class name, if any
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+
+class SourceFile:
+    """A parsed module plus its function/class index and suppressions."""
+
+    def __init__(self, path: Path, relpath: str, text: str):
+        self.path = path
+        self.relpath = relpath
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=str(path))
+        self.suppressions = Suppressions(self.lines)
+        self.functions: list[FunctionInfo] = []
+        self.classes: dict[str, ast.ClassDef] = {}
+        self._index()
+        self._symbol_spans: list[tuple[int, int, str]] = sorted(
+            (fi.node.lineno, getattr(fi.node, "end_lineno", fi.node.lineno),
+             fi.qualname)
+            for fi in self.functions)
+
+    def _index(self) -> None:
+        def visit(node, prefix: str, cls: Optional[str]):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    q = f"{prefix}{child.name}"
+                    self.functions.append(FunctionInfo(q, child, cls))
+                    visit(child, f"{q}.<locals>.", cls)
+                elif isinstance(child, ast.ClassDef):
+                    self.classes[child.name] = child
+                    visit(child, f"{prefix}{child.name}.", child.name)
+                elif isinstance(child, ast.Lambda):
+                    self.functions.append(
+                        FunctionInfo(f"{prefix}<lambda>", child, cls))
+                else:
+                    visit(child, prefix, cls)
+        visit(self.tree, "", None)
+
+    def symbol_at(self, line: int) -> str:
+        """Innermost function qualname containing ``line``."""
+        best = "<module>"
+        best_span = None
+        for lo, hi, q in self._symbol_spans:
+            if lo <= line <= hi:
+                if best_span is None or hi - lo <= best_span:
+                    best, best_span = q, hi - lo
+        return best
+
+    def methods_of(self, cls_name: str) -> dict[str, FunctionInfo]:
+        return {fi.name: fi for fi in self.functions
+                if fi.cls == cls_name and "<locals>" not in fi.qualname}
+
+    def class_call_graph(self, cls_name: str) -> dict[str, set[str]]:
+        """method name -> same-class methods it calls via ``self.m(...)``
+        (or references as ``self.m`` — bound-method passing counts)."""
+        methods = self.methods_of(cls_name)
+        graph: dict[str, set[str]] = {m: set() for m in methods}
+        for name, fi in methods.items():
+            for node in ast.walk(fi.node):
+                if (isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                        and node.attr in methods):
+                    graph[name].add(node.attr)
+        return graph
+
+    @staticmethod
+    def reachable(graph: dict[str, set[str]], roots) -> set[str]:
+        seen = set()
+        stack = [r for r in roots if r in graph]
+        while stack:
+            m = stack.pop()
+            if m in seen:
+                continue
+            seen.add(m)
+            stack.extend(graph.get(m, ()))
+        return seen
+
+
+def iter_source_files(root: Path, rel_to: Path) -> Iterator[SourceFile]:
+    """Yield parsed ``SourceFile``s under ``root`` (or ``root`` itself
+    for a single file), paths relative to ``rel_to``.  Unparseable files
+    are skipped — a syntax error fails the test suite on its own."""
+    paths = [root] if root.is_file() else sorted(root.rglob("*.py"))
+    for p in paths:
+        try:
+            text = p.read_text()
+            yield SourceFile(p, p.relative_to(rel_to).as_posix(), text)
+        except (SyntaxError, UnicodeDecodeError):
+            continue
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain ("jax.jit", "self.kv.free");
+    None for anything rooted in a non-name (e.g. a call result)."""
+    parts = attr_parts(node)
+    return ".".join(parts) if parts else None
+
+
+def attr_parts(node: ast.AST) -> Optional[list[str]]:
+    """["self", "backend", "kv", "lengths"] for nested attributes;
+    subscripts are transparent (``a.b[i].c`` -> [a, b, c])."""
+    parts: list[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            return parts[::-1]
+        else:
+            return None
+
+
+def call_args(call: ast.Call) -> list[ast.AST]:
+    """Positional + keyword argument value nodes."""
+    return list(call.args) + [kw.value for kw in call.keywords]
+
+
+def name_loads(node: ast.AST) -> set[str]:
+    """All Name identifiers read anywhere inside ``node``."""
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+class FuncIndex:
+    """Module-level function lookup + module-local call graph, used by
+    the jit-hazard pass to close over reachable callees."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        # simple name -> FunctionInfo (module level and class methods;
+        # ambiguity resolved last-wins, acceptable for our modules)
+        self.by_name: dict[str, FunctionInfo] = {}
+        for fi in sf.functions:
+            if not isinstance(fi.node, ast.Lambda):
+                self.by_name.setdefault(fi.name, fi)
+
+    def callees(self, fi: FunctionInfo) -> set["FunctionInfo"]:
+        """Module-local functions called from ``fi`` by simple name or
+        ``self.method`` (resolved within the same class)."""
+        out = set()
+        methods = self.sf.methods_of(fi.cls) if fi.cls else {}
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in self.by_name:
+                out.add(self.by_name[f.id].qualname)
+            elif (isinstance(f, ast.Attribute)
+                  and isinstance(f.value, ast.Name)
+                  and f.value.id == "self" and f.attr in methods):
+                out.add(methods[f.attr].qualname)
+        by_qual = {x.qualname: x for x in self.sf.functions}
+        return {by_qual[q] for q in out if q in by_qual}

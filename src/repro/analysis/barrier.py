@@ -1,0 +1,165 @@
+"""RA3xx — barrier / state-scope discipline.
+
+The universal-balancing analysis prices imbalance at *step*
+granularity: engine and fleet accumulators (telemetry counters, slot
+table mirrors, snapshot caches) are meaningful only if they mutate
+inside the barrier — i.e. from call graphs rooted at ``step()`` (or
+the other declared roots).  A helper that bumps ``self.t_now`` from an
+ad-hoc entry point silently breaks the pricing and every downstream
+bit-identity gate.
+
+Codes:
+
+* **RA301** — a registry-declared step-scoped attribute is written
+  from a method *not* reachable from the scope's roots.
+* **RA302** — on the vec path, engine state is mutated (``eng.step``
+  / ``eng.submit`` on an object drawn from ``self.engines``) with no
+  ``_refresh`` afterwards — neither later in the same method nor after
+  the call site in every vec-reachable caller — so the cached
+  ``_snap_*`` arrays go stale and the vec route diverges from ref.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import SourceFile, attr_parts
+from .findings import Finding
+from .registry import Registry, StateScope, VecSnapshotScope
+
+__all__ = ["run"]
+
+
+def _self_attr_writes(fn_node: ast.AST):
+    """Yield (line, attr) for writes to ``self.<attr>`` (plain,
+    augmented, subscripted, or tuple-unpacked)."""
+    for node in ast.walk(fn_node):
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            stack = [t]
+            while stack:
+                x = stack.pop()
+                if isinstance(x, (ast.Tuple, ast.List)):
+                    stack.extend(x.elts)
+                    continue
+                parts = attr_parts(x)
+                if parts and len(parts) >= 2 and parts[0] == "self":
+                    yield x.lineno, parts[1]
+
+
+def _check_scope(sf: SourceFile, scope: StateScope,
+                 out: list[Finding]) -> None:
+    if scope.cls not in sf.classes:
+        return
+    graph = sf.class_call_graph(scope.cls)
+    allowed = sf.reachable(graph, scope.roots)
+    for name, fi in sf.methods_of(scope.cls).items():
+        if name in allowed:
+            continue
+        for line, attr in _self_attr_writes(fi.node):
+            if scope.covers(attr):
+                out.append(Finding(
+                    sf.relpath, line, "RA301", sf.symbol_at(line),
+                    f"step-scoped state self.{attr} written in "
+                    f"{scope.cls}.{name}, which is not reachable "
+                    f"from the declared barrier roots "
+                    f"({', '.join(sorted(scope.roots))}) — state "
+                    "must mutate inside the step boundary"))
+
+
+def _mutation_sites(sf: SourceFile, scope: VecSnapshotScope,
+                    fn_node: ast.AST) -> list[int]:
+    """Lines in ``fn_node`` that mutate engine state: calls to a
+    mutator verb on ``self.<engines_attr>[...]`` directly or on a
+    local bound to it."""
+    engine_locals: set[str] = set()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            parts = attr_parts(node.value)
+            if parts and scope.engines_attr in parts:
+                engine_locals.add(node.targets[0].id)
+        elif isinstance(node, ast.For) and isinstance(node.target,
+                                                     ast.Name):
+            parts = attr_parts(node.iter)
+            if parts and scope.engines_attr in parts:
+                engine_locals.add(node.target.id)
+    sites = []
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        parts = attr_parts(node.func)
+        if not parts or parts[-1] not in scope.mutators:
+            continue
+        if scope.engines_attr in parts[:-1] \
+                or parts[0] in engine_locals:
+            sites.append(node.lineno)
+    return sites
+
+
+def _refresh_lines(sf: SourceFile, scope: VecSnapshotScope,
+                   fn_node: ast.AST) -> list[int]:
+    return [node.lineno for node in ast.walk(fn_node)
+            if isinstance(node, ast.Call)
+            and attr_parts(node.func) == ["self", scope.refresh]]
+
+
+def _call_sites_of(sf: SourceFile, caller_node: ast.AST,
+                   method: str) -> list[int]:
+    return [node.lineno for node in ast.walk(caller_node)
+            if isinstance(node, ast.Call)
+            and attr_parts(node.func) == ["self", method]]
+
+
+def _check_vec_scope(sf: SourceFile, scope: VecSnapshotScope,
+                     out: list[Finding]) -> None:
+    if scope.cls not in sf.classes:
+        return
+    methods = sf.methods_of(scope.cls)
+    graph = sf.class_call_graph(scope.cls)
+    vec_reachable = sf.reachable(graph, scope.vec_roots)
+    for name in sorted(vec_reachable):
+        fi = methods.get(name)
+        if fi is None:
+            continue
+        sites = _mutation_sites(sf, scope, fi.node)
+        if not sites:
+            continue
+        refreshes = _refresh_lines(sf, scope, fi.node)
+        for site in sites:
+            if any(r > site for r in refreshes):
+                continue                      # refreshed in-method
+            # else every vec-reachable caller must refresh after the
+            # call into this method
+            callers = [c for c in vec_reachable
+                       if name in graph.get(c, set()) and c != name]
+            covered = bool(callers)
+            for c in callers:
+                c_node = methods[c].node
+                c_sites = _call_sites_of(sf, c_node, name)
+                c_refresh = _refresh_lines(sf, scope, c_node)
+                if not all(any(r > s for r in c_refresh)
+                           for s in c_sites):
+                    covered = False
+            if not covered:
+                out.append(Finding(
+                    sf.relpath, site, "RA302", sf.symbol_at(site),
+                    f"vec-path engine mutation in {scope.cls}.{name} "
+                    f"with no {scope.refresh}() afterwards (in-method "
+                    "or at every vec-reachable call site) — the "
+                    "cached snapshot arrays go stale and the vec "
+                    "route diverges from ref"))
+
+
+def run(sf: SourceFile, registry: Registry) -> list[Finding]:
+    out: list[Finding] = []
+    for scope in registry.state_scopes:
+        if sf.relpath.endswith(scope.file_suffix):
+            _check_scope(sf, scope, out)
+    for vscope in registry.vec_scopes:
+        if sf.relpath.endswith(vscope.file_suffix):
+            _check_vec_scope(sf, vscope, out)
+    return out

@@ -1,0 +1,135 @@
+"""Findings, inline suppressions, and the committed baseline.
+
+A finding is one contract violation at one source location, identified
+by an ``RA`` code (see :mod:`repro.analysis` for the code families).
+Two mechanisms keep pre-existing or intentional findings from failing
+CI while every *new* finding does:
+
+* **Inline suppression** — a ``# ra: ignore[RA204]`` comment on the
+  flagged line (or ``# ra: ignore`` to suppress every code on it).
+  Use this where the violation is intentional and the reason fits in
+  the surrounding comment (e.g. the ref-path oracle's eager jnp ops).
+* **Baseline** — a committed JSON file mapping ``(code, path, symbol)``
+  to an allowed count.  ``python -m repro.analysis --write-baseline``
+  regenerates it; CI fails only on findings beyond the baselined
+  count, so new violations in an already-noisy symbol still fail.
+
+Baseline matching is by (code, path, enclosing symbol), NOT by line
+number, so unrelated edits shifting lines never invalidate it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Iterable, Optional
+
+__all__ = ["Finding", "Suppressions", "Baseline", "apply_baseline"]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*ra:\s*ignore(?:\[([A-Za-z0-9_,\s]*)\])?")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One static-analysis finding.
+
+    ``path`` is stored relative to the scan root (posix separators) so
+    baselines match regardless of where the tree is checked out;
+    ``symbol`` is the enclosing ``Class.method`` / function qualname
+    (or ``<module>``) used for line-stable baseline matching.
+    """
+
+    path: str
+    line: int
+    code: str
+    symbol: str
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: {self.code} "
+                f"[{self.symbol}] {self.message}")
+
+
+class Suppressions:
+    """Per-file map of line -> suppressed codes (None = all codes)."""
+
+    def __init__(self, lines: Iterable[str]):
+        self._by_line: dict[int, Optional[set[str]]] = {}
+        for i, text in enumerate(lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            codes = m.group(1)
+            if codes is None or not codes.strip():
+                self._by_line[i] = None            # blanket ignore
+            else:
+                self._by_line[i] = {c.strip().upper()
+                                    for c in codes.split(",") if c.strip()}
+
+    def suppressed(self, line: int, code: str) -> bool:
+        if line not in self._by_line:
+            return False
+        codes = self._by_line[line]
+        return codes is None or code.upper() in codes
+
+
+class Baseline:
+    """Committed allowance of known findings: (code, path, symbol) ->
+    count.  See the module docstring for the workflow."""
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[dict[tuple, int]] = None):
+        self.entries: dict[tuple, int] = dict(entries or {})
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding]) -> "Baseline":
+        entries: dict[tuple, int] = {}
+        for f in findings:
+            key = (f.code, f.path, f.symbol)
+            entries[key] = entries.get(key, 0) + 1
+        return cls(entries)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != cls.VERSION:
+            raise ValueError(
+                f"{path}: unsupported baseline version "
+                f"{doc.get('version')!r} (this tool writes "
+                f"{cls.VERSION}); regenerate with --write-baseline")
+        entries = {}
+        for e in doc["findings"]:
+            entries[(e["code"], e["path"], e["symbol"])] = int(e["count"])
+        return cls(entries)
+
+    def save(self, path: str) -> None:
+        rows = [{"code": c, "path": p, "symbol": s, "count": n}
+                for (c, p, s), n in sorted(self.entries.items())]
+        with open(path, "w") as f:
+            json.dump({"version": self.VERSION, "findings": rows}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: Baseline) -> tuple[list[Finding], list[tuple]]:
+    """Split findings into (new, stale-baseline-keys).
+
+    Each baseline entry absorbs up to ``count`` findings with the same
+    (code, path, symbol); the rest are new.  Keys whose allowance is not
+    fully used are returned as stale (informational — a fixed finding
+    should eventually be dropped from the baseline, but staleness never
+    fails the run)."""
+    budget = dict(baseline.entries)
+    new: list[Finding] = []
+    for f in sorted(findings):
+        key = (f.code, f.path, f.symbol)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+        else:
+            new.append(f)
+    stale = [k for k, n in sorted(budget.items()) if n > 0]
+    return new, stale

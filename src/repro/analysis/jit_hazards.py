@@ -1,0 +1,362 @@
+"""RA1xx — jit-hazard lint.
+
+Traced values inside ``jax.jit`` / ``pallas_call``-reachable functions
+must never leak to the host: a ``float()`` / ``np.asarray()`` /
+``.item()`` on a tracer either crashes (ConcretizationTypeError) or —
+worse — silently forces a device sync per call when the value is an
+already-committed array.  Data-dependent Python branches burn a
+recompile per branch outcome; unhashable static args fail at trace
+time with an error far from the definition.
+
+Codes:
+
+* **RA101** — host sync on a traced value (``float``/``int``/``bool``
+  builtins, ``np.asarray``/``np.array``, ``.item()``/``.tolist()``).
+* **RA102** — Python ``if``/``while``/ternary branching on a traced
+  value (shape/dtype/ndim reads and ``is None`` tests are static and
+  exempt).
+* **RA103** — a ``static_argnames``/``static_argnums`` parameter whose
+  default is an unhashable literal (list/dict/set).
+* **RA104** — eager ``jnp.*`` op inside a registry-declared host
+  accounting path (one device dispatch per barrier step; use numpy or
+  fold it into the jitted call).
+
+Jit roots are found syntactically: ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` decorations, functions or lambdas
+passed to ``jax.jit(...)`` / ``pl.pallas_call(...)``, plus everything
+they reach through same-module calls.  Cross-module reachability is
+out of scope (the fixture corpus pins the supported shapes).
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import (
+    FuncIndex,
+    FunctionInfo,
+    SourceFile,
+    call_args,
+    dotted,
+)
+from .findings import Finding
+from .registry import Registry
+
+__all__ = ["run"]
+
+_JIT_SUFFIXES = ("jax.jit", "jit", "pjit", "pallas_call")
+_HOST_BUILTINS = {"float", "int", "bool"}
+_HOST_NP = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "onp.asarray", "onp.array"}
+_HOST_METHODS = {"item", "tolist"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "nbytes",
+                 "name", "sharding"}
+_STATIC_FUNCS = {"len", "isinstance", "type", "getattr", "hasattr",
+                 "range", "enumerate"}
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+
+
+def _is_jit_name(name) -> bool:
+    return bool(name) and (name in _JIT_SUFFIXES
+                           or any(name.endswith("." + s)
+                                  for s in _JIT_SUFFIXES))
+
+
+def _jit_call_wrapped(call: ast.Call):
+    """Function-valued argument nodes of a jit/pallas_call call,
+    unwrapping one level of functools.partial."""
+    out = []
+    for a in call_args(call):
+        if isinstance(a, (ast.Lambda, ast.Name)):
+            out.append(a)
+        elif isinstance(a, ast.Call) and (dotted(a.func) or "").endswith(
+                "partial"):
+            out.extend(x for x in call_args(a)
+                       if isinstance(x, (ast.Lambda, ast.Name)))
+    return out
+
+
+def _find_roots(sf: SourceFile) -> tuple[set, list]:
+    """(jit-rooted function nodes, jit call sites) in a module."""
+    roots: set[ast.AST] = set()
+    jit_calls: list[ast.Call] = []
+    by_name = {fi.name: fi.node for fi in sf.functions
+               if not isinstance(fi.node, ast.Lambda)}
+    for fi in sf.functions:
+        for dec in getattr(fi.node, "decorator_list", []):
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _is_jit_name(dotted(target)):
+                roots.add(fi.node)
+                if isinstance(dec, ast.Call):
+                    jit_calls.append(dec)
+            elif (isinstance(dec, ast.Call)
+                  and (dotted(dec.func) or "").endswith("partial")
+                  and any(_is_jit_name(dotted(a)) for a in call_args(dec))):
+                roots.add(fi.node)
+                jit_calls.append(dec)
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call) and _is_jit_name(
+                dotted(node.func))):
+            continue
+        jit_calls.append(node)
+        for a in _jit_call_wrapped(node):
+            if isinstance(a, ast.Lambda):
+                roots.add(a)
+            elif isinstance(a, ast.Name) and a.id in by_name:
+                roots.add(by_name[a.id])
+    return roots, jit_calls
+
+
+def _close_over_callees(sf: SourceFile, roots: set) -> set:
+    idx = FuncIndex(sf)
+    by_node = {fi.node: fi for fi in sf.functions}
+    stack = [by_node[n] for n in roots if n in by_node]
+    seen: set[ast.AST] = set(roots)
+    while stack:
+        fi = stack.pop()
+        for callee in idx.callees(fi):
+            if callee.node not in seen:
+                seen.add(callee.node)
+                stack.append(callee)
+    return seen
+
+
+def _expr_tainted(node: ast.AST, tainted: set[str]) -> bool:
+    """Does ``node`` (an expression) carry a traced value?  Shape/dtype
+    reads and static builtins launder the taint (they are concrete at
+    trace time)."""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Subscript):
+        # x.shape[0] is static; x[i] carries x's (and i's) taint
+        if (isinstance(node.value, ast.Attribute)
+                and node.value.attr in _STATIC_ATTRS):
+            return False
+        return (_expr_tainted(node.value, tainted)
+                or _expr_tainted(node.slice, tainted))
+    if isinstance(node, ast.Call):
+        if (dotted(node.func) or "") in _STATIC_FUNCS:
+            return False
+        return any(_expr_tainted(a, tainted) for a in call_args(node)) \
+            or _expr_tainted(node.func, tainted)
+    if isinstance(node, (ast.Constant, ast.JoinedStr)):
+        return False
+    return any(_expr_tainted(c, tainted)
+               for c in ast.iter_child_nodes(node))
+
+
+def _tainted_params(fn: ast.AST, static: set[str]) -> set[str]:
+    """Params that may carry tracers.  Keyword-only params are static
+    configuration by repo convention (``*, tile_i=64, interpret=False``
+    — arrays are always positional), and jit-declared static args are
+    concrete at trace time."""
+    args = fn.args
+    names = [a.arg for a in (args.posonlyargs + args.args)]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    return {n for n in names
+            if n not in ("self", "cls") and n not in static}
+
+
+def _static_names(sf: SourceFile, jit_calls: list) -> dict:
+    """fn node -> param names declared static at its jit boundary."""
+    by_name = {fi.name: fi.node for fi in sf.functions
+               if not isinstance(fi.node, ast.Lambda)}
+    out: dict[ast.AST, set[str]] = {}
+    for call in jit_calls:
+        names: set[str] = set()
+        nums: set[int] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                names |= {n.value for n in ast.walk(kw.value)
+                          if isinstance(n, ast.Constant)
+                          and isinstance(n.value, str)}
+            elif kw.arg == "static_argnums":
+                nums |= {n.value for n in ast.walk(kw.value)
+                         if isinstance(n, ast.Constant)
+                         and isinstance(n.value, int)}
+        if not names and not nums:
+            continue
+        defs = [by_name[a.id] for a in _jit_call_wrapped(call)
+                if isinstance(a, ast.Name) and a.id in by_name]
+        for fi in sf.functions:
+            if call in getattr(fi.node, "decorator_list", []):
+                defs.append(fi.node)
+        for fn in defs:
+            pos = fn.args.posonlyargs + fn.args.args
+            resolved = set(names)
+            resolved |= {pos[i].arg for i in nums if i < len(pos)}
+            out.setdefault(fn, set()).update(resolved)
+    return out
+
+
+def _propagate(fn: ast.AST, tainted: set[str]) -> set[str]:
+    """One forward pass of assignment taint in source order (our
+    functions are straight-line enough that a fixpoint is overkill)."""
+    body = getattr(fn, "body", None)
+    if body is None:                       # Lambda
+        return tainted
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _expr_tainted(node.value,
+                                                          tainted):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        tainted.add(n.id)
+        elif isinstance(node, ast.AugAssign) and isinstance(
+                node.target, ast.Name):
+            if _expr_tainted(node.value, tainted):
+                tainted.add(node.target.id)
+        elif isinstance(node, ast.For) and _expr_tainted(node.iter,
+                                                         tainted):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    tainted.add(n.id)
+    return tainted
+
+
+def _branch_exempt(test: ast.AST) -> bool:
+    """Static-under-trace tests: identity checks and isinstance."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _branch_exempt(test.operand)
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.Call) and (dotted(test.func) or "") in (
+            "isinstance", "callable", "hasattr"):
+        return True
+    return False
+
+
+def _check_fn(sf: SourceFile, fi: FunctionInfo, static: set[str],
+              out: list[Finding]) -> None:
+    tainted = _propagate(fi.node, _tainted_params(fi.node, static))
+    if not tainted:
+        return
+
+    def emit(code: str, node: ast.AST, msg: str) -> None:
+        out.append(Finding(sf.relpath, node.lineno, code,
+                           sf.symbol_at(node.lineno), msg))
+
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func) or ""
+            args_tainted = any(_expr_tainted(a, tainted)
+                               for a in call_args(node))
+            if name in _HOST_BUILTINS and args_tainted:
+                emit("RA101", node,
+                     f"host sync: {name}() on a traced value inside a "
+                     "jit-reachable function (concretizes the tracer / "
+                     "forces a device sync)")
+            elif name in _HOST_NP and args_tainted:
+                emit("RA101", node,
+                     f"host sync: {name}() pulls a traced value to "
+                     "host inside a jit-reachable function")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _HOST_METHODS
+                  and _expr_tainted(node.func.value, tainted)):
+                emit("RA101", node,
+                     f"host sync: .{node.func.attr}() on a traced "
+                     "value inside a jit-reachable function")
+        elif isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            if (not _branch_exempt(node.test)
+                    and _expr_tainted(node.test, tainted)):
+                emit("RA102", node,
+                     "data-dependent Python branch on a traced value "
+                     "(recompiles per outcome; use lax.cond/jnp.where)")
+
+
+def _check_static_args(sf: SourceFile, jit_calls: list,
+                       out: list[Finding]) -> None:
+    by_name = {fi.name: fi.node for fi in sf.functions
+               if not isinstance(fi.node, ast.Lambda)}
+
+    def wrapped_defs(call: ast.Call):
+        defs = [by_name[a.id] for a in _jit_call_wrapped(call)
+                if isinstance(a, ast.Name) and a.id in by_name]
+        # decorator form: the call IS the decorator; find its function
+        for fi in sf.functions:
+            if call in getattr(fi.node, "decorator_list", []):
+                defs.append(fi.node)
+        return defs
+
+    for call in jit_calls:
+        static_names: set[str] = set()
+        static_nums: set[int] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                static_names |= {n.value for n in ast.walk(kw.value)
+                                 if isinstance(n, ast.Constant)
+                                 and isinstance(n.value, str)}
+            elif kw.arg == "static_argnums":
+                static_nums |= {n.value for n in ast.walk(kw.value)
+                                if isinstance(n, ast.Constant)
+                                and isinstance(n.value, int)}
+        if not static_names and not static_nums:
+            continue
+        for fn in wrapped_defs(call):
+            args = fn.args.posonlyargs + fn.args.args
+            defaults = [None] * (len(args) - len(fn.args.defaults)) \
+                + list(fn.args.defaults)
+            kw_defaults = dict(zip(
+                (a.arg for a in fn.args.kwonlyargs), fn.args.kw_defaults))
+            for i, a in enumerate(args):
+                if (a.arg in static_names or i in static_nums) \
+                        and isinstance(defaults[i], _MUTABLE_LITERALS):
+                    out.append(Finding(
+                        sf.relpath, defaults[i].lineno, "RA103",
+                        sf.symbol_at(fn.lineno),
+                        f"static arg {a.arg!r} defaults to an "
+                        "unhashable literal — jit static args must "
+                        "be hashable"))
+            for a in fn.args.kwonlyargs:
+                d = kw_defaults.get(a.arg)
+                if a.arg in static_names and isinstance(
+                        d, _MUTABLE_LITERALS):
+                    out.append(Finding(
+                        sf.relpath, d.lineno, "RA103",
+                        sf.symbol_at(fn.lineno),
+                        f"static arg {a.arg!r} defaults to an "
+                        "unhashable literal — jit static args must "
+                        "be hashable"))
+
+
+def _check_host_hot(sf: SourceFile, registry: Registry,
+                    out: list[Finding]) -> None:
+    hot = {q for suffix, q in registry.host_hot
+           if sf.relpath.endswith(suffix)}
+    if not hot:
+        return
+    for fi in sf.functions:
+        if fi.qualname not in hot:
+            continue
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Call):
+                name = dotted(node.func) or ""
+                if name.startswith(("jnp.", "jax.numpy.")):
+                    out.append(Finding(
+                        sf.relpath, node.lineno, "RA104",
+                        sf.symbol_at(node.lineno),
+                        f"eager {name} in host accounting path "
+                        f"{fi.qualname} — one device dispatch per "
+                        "barrier step; use numpy or fold into the "
+                        "jitted call"))
+
+
+def run(sf: SourceFile, registry: Registry) -> list[Finding]:
+    out: list[Finding] = []
+    roots, jit_calls = _find_roots(sf)
+    reachable = _close_over_callees(sf, roots)
+    static_by_node = _static_names(sf, jit_calls)
+    by_node = {fi.node: fi for fi in sf.functions}
+    for node in reachable:
+        fi = by_node.get(node)
+        if fi is not None:
+            _check_fn(sf, fi, static_by_node.get(node, set()), out)
+    _check_static_args(sf, jit_calls, out)
+    _check_host_hot(sf, registry, out)
+    return out

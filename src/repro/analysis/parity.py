@@ -1,0 +1,123 @@
+"""RA4xx — ref/vec parity surface.
+
+Every ref/vec seam in the repo (engine decode, fleet step, fleet
+route, solver swap search) is gated bit-identical by tier-1, but the
+gates only compare *outputs*.  A config knob or stats key consumed by
+exactly one side passes those gates on today's traces and silently
+forks behaviour on tomorrow's.  This pass compares the *input surface*
+of each declared pair:
+
+* ``cfg:<field>`` — config fields read (``self.cfg.x`` / ``cfg.x``),
+* ``attr:<name>`` — ``self.<name>`` attributes touched,
+* ``kw:<callee>:<name>`` — keyword names passed to callees,
+* ``key:<literal>`` — constant string subscript keys,
+
+and flags anything present on one side only, minus the pair's declared
+``allow_ref`` / ``allow_vec`` (entries may end in ``*`` for prefix
+matches, e.g. ``attr:_snap_*``).
+
+Codes: **RA401** for one-sided config fields, **RA402** for any other
+one-sided surface item.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .astutil import FunctionInfo, SourceFile, attr_parts
+from .findings import Finding
+from .registry import RefVecPair, Registry
+
+__all__ = ["run", "surface_of"]
+
+_CFG_NAMES = {"cfg", "config"}
+
+
+def surface_of(fn_node: ast.AST) -> tuple[set[str], dict]:
+    """(base surface items, callee -> keyword names).  Keyword items
+    are kept separate so the caller can restrict the comparison to
+    callees both sides share — a kwarg fed to a ref-only numpy helper
+    is not a parity hazard, an extra kwarg on a shared ``_account``
+    call is."""
+    items: set[str] = set()
+    kw_by_callee: dict[str, set[str]] = {}
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Attribute):
+            parts = attr_parts(node)
+            if not parts:
+                continue
+            for i, p in enumerate(parts[:-1]):
+                if p in _CFG_NAMES:
+                    items.add(f"cfg:{parts[i + 1]}")
+                    break
+            else:
+                if parts[0] == "self" and len(parts) >= 2:
+                    items.add(f"attr:{parts[1]}")
+        elif isinstance(node, ast.Call):
+            parts = attr_parts(node.func)
+            callee = parts[-1] if parts else None
+            if callee:
+                kws = kw_by_callee.setdefault(callee, set())
+                kws.update(kw.arg for kw in node.keywords
+                           if kw.arg is not None)
+        elif isinstance(node, ast.Subscript):
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value,
+                                                           str):
+                items.add(f"key:{sl.value}")
+    # plain ``cfg.x`` chains start at a Name, drop the attr: duplicate
+    items.discard("attr:cfg")
+    items.discard("attr:config")
+    return items, kw_by_callee
+
+
+def _allowed(item: str, allow: frozenset) -> bool:
+    return item in allow or any(
+        a.endswith("*") and item.startswith(a[:-1]) for a in allow)
+
+
+def _resolve_pair(sf: SourceFile, pair: RefVecPair
+                  ) -> tuple[Optional[FunctionInfo],
+                             Optional[FunctionInfo]]:
+    if pair.cls is not None:
+        methods = sf.methods_of(pair.cls)
+        return methods.get(pair.ref), methods.get(pair.vec)
+    top = {fi.name: fi for fi in sf.functions
+           if fi.cls is None and "<locals>" not in fi.qualname}
+    return top.get(pair.ref), top.get(pair.vec)
+
+
+def _check_pair(sf: SourceFile, pair: RefVecPair,
+                out: list[Finding]) -> None:
+    ref_fi, vec_fi = _resolve_pair(sf, pair)
+    if ref_fi is None or vec_fi is None:
+        return                         # pair gone: parity moot here
+    ref_s, ref_kw = surface_of(ref_fi.node)
+    vec_s, vec_kw = surface_of(vec_fi.node)
+    for callee in ref_kw.keys() & vec_kw.keys():
+        ref_s.update(f"kw:{callee}:{k}" for k in ref_kw[callee])
+        vec_s.update(f"kw:{callee}:{k}" for k in vec_kw[callee])
+
+    def emit(item: str, fi: FunctionInfo, side: str, other: str):
+        code = "RA401" if item.startswith("cfg:") else "RA402"
+        out.append(Finding(
+            sf.relpath, fi.node.lineno, code, fi.qualname,
+            f"{item} is consumed only by the {side} side of the "
+            f"{pair.ref}/{pair.vec} pair (absent from {other}) — "
+            "declare it in the registry allowlist if the asymmetry "
+            "is intentional"))
+
+    for item in sorted(ref_s - vec_s):
+        if not _allowed(item, pair.allow_ref):
+            emit(item, ref_fi, "ref", pair.vec)
+    for item in sorted(vec_s - ref_s):
+        if not _allowed(item, pair.allow_vec):
+            emit(item, vec_fi, "vec", pair.ref)
+
+
+def run(sf: SourceFile, registry: Registry) -> list[Finding]:
+    out: list[Finding] = []
+    for pair in registry.pairs:
+        if sf.relpath.endswith(pair.file_suffix):
+            _check_pair(sf, pair, out)
+    return out

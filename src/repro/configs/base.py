@@ -16,7 +16,6 @@ variants are derived with ``smoke_variant``.  Families:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 __all__ = ["ModelConfig", "smoke_variant"]
 

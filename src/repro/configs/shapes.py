@@ -9,7 +9,6 @@ sliding-window variant (rolling KV buffer) — see DESIGN.md §5.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

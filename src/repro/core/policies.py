@@ -15,7 +15,7 @@ from typing import Optional
 import numpy as np
 
 from . import io_solver
-from .lookahead import GeometricPredictor, Predictor, trajectories
+from .lookahead import Predictor, trajectories
 from .workload import DriftModel
 
 __all__ = [

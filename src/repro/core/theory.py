@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 from .energy import PowerModel, asymptotic_saving, saving_bound
 

@@ -13,7 +13,7 @@ Also provides token batches for the training substrate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import numpy as np
 

@@ -17,6 +17,11 @@ be streamed to disk while serving and post-processed with standard
 tooling; :meth:`read_jsonl` round-trips a file back into an equivalent
 telemetry object (gated by ``tests/test_fleet.py``).  The ``fleet``
 section of ``benchmarks/balancer_bench.py`` consumes these summaries.
+
+The meta record carries ``schema_version`` (:data:`SCHEMA_VERSION`);
+the reader rejects files written under any other version up front,
+instead of failing later with an opaque ``KeyError`` on a reshaped
+record.  Bump the constant whenever a record's key set changes.
 """
 from __future__ import annotations
 
@@ -26,7 +31,10 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["SLOSpec", "FleetTelemetry", "percentiles"]
+__all__ = ["SLOSpec", "FleetTelemetry", "percentiles",
+           "SCHEMA_VERSION"]
+
+SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,7 +139,8 @@ class FleetTelemetry:
     def write_jsonl(self, path: str) -> None:
         with open(path, "w") as f:
             f.write(json.dumps(
-                {"kind": "meta", "slo": dataclasses.asdict(self.slo),
+                {"kind": "meta", "schema_version": SCHEMA_VERSION,
+                 "slo": dataclasses.asdict(self.slo),
                  "record_steps": self.record_steps}) + "\n")
             for s in self.steps:
                 f.write(json.dumps({"kind": "step", **s}) + "\n")
@@ -151,6 +160,13 @@ class FleetTelemetry:
                 rec = json.loads(line)
                 kind = rec.pop("kind")
                 if kind == "meta":
+                    version = rec.get("schema_version")
+                    if version != SCHEMA_VERSION:
+                        raise ValueError(
+                            f"{path}: telemetry schema_version "
+                            f"{version!r} not supported (reader "
+                            f"expects {SCHEMA_VERSION}); re-export "
+                            "the run with this version")
                     tel = cls(slo=SLOSpec(**rec["slo"]),
                               record_steps=rec["record_steps"])
                 elif kind == "step":

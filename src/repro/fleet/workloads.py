@@ -39,7 +39,7 @@ import dataclasses
 
 import numpy as np
 
-from ..data.synthetic import WorkloadSpec, decode_sampler, prefill_sampler
+from ..data.synthetic import WorkloadSpec
 from ..data.traces import bursty_trace, diurnal_trace, poisson_trace
 from ..serving import ServeRequest
 

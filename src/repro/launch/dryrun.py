@@ -25,7 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -37,7 +36,7 @@ from ..configs import (
     input_specs,
     list_archs,
 )
-from ..models import decode_fn, init_params, loss_fn, prefill_fn, split_params
+from ..models import decode_fn, init_params, prefill_fn, split_params
 from ..training.optimizer import AdamWConfig, init_opt_state
 from ..training.train_loop import make_train_step
 from .mesh import (

@@ -27,7 +27,6 @@ import gzip
 import json
 import os
 import re
-from typing import Optional
 
 from ..configs import config_for_shape, get_config, get_shape
 from ..configs.base import ModelConfig
@@ -211,8 +210,6 @@ def corrected_collectives(text: str) -> dict:
         consts = [int(c) for ln in lines for c in _CONST_RE.findall(ln)]
         consts = [c for c in consts if c > 1]
         return max(consts) if consts else 1
-
-    from functools import lru_cache
 
     def walk(name: str, seen: tuple) -> dict:
         """bytes-by-op of computation ``name`` including nested calls."""

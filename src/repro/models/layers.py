@@ -9,7 +9,7 @@ mesh, and the 2x16x16 multi-pod mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

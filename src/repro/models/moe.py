@@ -24,7 +24,6 @@ capacity has a floor so decode batches don't drop.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

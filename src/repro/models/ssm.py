@@ -20,7 +20,6 @@ paper's Theorem 3: per-request serving cost is constant in response length).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

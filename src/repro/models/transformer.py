@@ -15,9 +15,7 @@ Design points:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,12 +30,10 @@ from .layers import (
     cross_entropy_loss,
     dense_init,
     embed_init,
-    layer_norm,
     linear,
     make_rope,
     norm_init,
     rms_norm,
-    split_params,
     swiglu,
 )
 from .moe import moe_ffn

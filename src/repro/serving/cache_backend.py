@@ -384,8 +384,7 @@ class PagedCacheBackend(CacheBackend):
             if blk is None or self.kv.allocator.ref_count(blk) <= 0:
                 break
             shared.append(blk)
-        self.prefix.queries += len(keys)
-        self.prefix.hits += len(shared)
+        self.prefix.note_lookup(len(keys), len(shared))
         return keys, shared
 
     def write_prefill(self, mini_cache, src, dst, tokens=None) -> None:
@@ -467,17 +466,13 @@ class PagedCacheBackend(CacheBackend):
         # keep the last prompt token out of the shared run (see above)
         while shared and len(shared) * self.block_size >= L:
             shared.pop()
-        self.prefix.queries += len(keys)
-        self.prefix.hits += len(shared)
+        self.prefix.note_lookup(len(keys), len(shared))
         if not shared:
             return 0
         for b in shared:
             self.kv.allocator.add_ref(b)
-        self.kv.block_tables[slot, :] = -1
-        self.kv.block_tables[slot, :len(shared)] = shared
-        self.kv.req_blocks[slot] = list(shared)
         covered = len(shared) * self.block_size
-        self.kv.lengths[slot] = covered
+        self.kv.adopt_blocks(slot, shared, covered)
         return covered
 
     def register_chunk_prefix(self, slot: int, toks: np.ndarray) -> None:
@@ -576,10 +571,7 @@ class PagedCacheBackend(CacheBackend):
         slot = int(slot)
         n = state.n_blocks
         blocks = self.kv.allocator.alloc(n)
-        self.kv.block_tables[slot, :] = -1
-        self.kv.block_tables[slot, :n] = blocks
-        self.kv.req_blocks[slot] = blocks
-        self.kv.lengths[slot] = state.length
+        self.kv.adopt_blocks(slot, blocks, state.length)
         if n:
             self.kv.k_pool = swap_in_blocks(self.kv.k_pool, blocks,
                                             state.k_host)

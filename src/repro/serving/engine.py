@@ -727,7 +727,8 @@ class ServingEngine:
                         # the victim had decoded past max_seq_len on
                         # frozen KV: keep its RoPE position counter
                         # instead of restarting it at the cap
-                        self.backend.kv.lengths[slot] = job.resume_length
+                        self.backend.kv.set_length(slot,
+                                                   job.resume_length)
                     continue
                 if self._paged and self.backend.prefix is not None:
                     # index the finished prompt's blocks for later
@@ -854,7 +855,7 @@ class ServingEngine:
             for i in range(nb):
                 self._copy_cache_slot(mini_cache, i, int(slots[i]))
         for slot, length in length_fix:    # paged-only (resume path)
-            self.backend.kv.lengths[slot] = length
+            self.backend.kv.set_length(slot, length)
         for slot, r in done_slots:
             self._finish_at_prefill(slot, r)
 
@@ -928,9 +929,9 @@ class ServingEngine:
 
     def _decode_step_ref(self, active: list[int]) -> None:
         """Seed decode path: always decode all G*B slots, per-slot loop."""
-        tokens = jnp.asarray(self.slot_tokens)
+        tokens = jnp.asarray(self.slot_tokens)    # ra: ignore[RA104] — ref oracle is deliberately eager
         logits, self.cache = self._decode(self.params, self.cache, tokens)
-        nxt = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)
+        nxt = np.asarray(jnp.argmax(logits, -1), dtype=np.int32)  # ra: ignore[RA104] — ref oracle is deliberately eager
         for s in active:
             r = self.slot_req[s]
             tok = int(nxt[s])

@@ -117,6 +117,12 @@ class PrefixIndex:
     def __len__(self) -> int:
         return len(self._by_key)
 
+    def note_lookup(self, queries: int, hits: int) -> None:
+        """Record a batch of lookup outcomes in the hit-rate counters
+        (kept behind a method so backends never write index state)."""
+        self.queries += queries
+        self.hits += hits
+
     @staticmethod
     def chain(parent: Optional[int], tokens) -> int:
         """Key of the block holding ``tokens``, whose predecessor block
@@ -210,13 +216,38 @@ class PagedKVCache:
         the remaining blocks are freshly allocated."""
         n = -(-max(prompt_len, 1) // self.block_size)
         shared = list(shared[:n])
-        for b in shared:
-            self.allocator.add_ref(b)
-        blocks = shared + self.allocator.alloc(n - len(shared))
+        pinned: list[int] = []
+        try:
+            for b in shared:
+                self.allocator.add_ref(b)
+                pinned.append(b)
+            blocks = shared + self.allocator.alloc(n - len(shared))
+        except (MemoryError, ValueError):
+            # roll back the pins so a failed admit leaks nothing (RA205)
+            self._free(pinned)
+            raise
         self.block_tables[slot, :] = -1
         self.block_tables[slot, :n] = blocks
         self.lengths[slot] = prompt_len
         self.req_blocks[slot] = blocks
+
+    def set_length(self, slot: int, length: int) -> None:
+        """Set ``slot``'s written-KV length (resume paths where the
+        victim decoded past the cap on frozen KV keep their RoPE
+        position counter instead of restarting at the cap)."""
+        self.lengths[slot] = int(length)
+
+    def adopt_blocks(self, slot: int, blocks: list[int],
+                     length: int) -> None:
+        """Point ``slot`` at ``blocks`` — already owned by the caller
+        via ``alloc``/``add_ref`` — and set its length.  This is the
+        supported way for backends to rebind a slot's table (swap-in,
+        chunk-prefix seeding) without touching pool internals."""
+        blocks = list(blocks)
+        self.block_tables[slot, :] = -1
+        self.block_tables[slot, :len(blocks)] = blocks
+        self.req_blocks[slot] = blocks
+        self.lengths[slot] = int(length)
 
     def _cow(self, slot: int, bi: int) -> tuple[int, int]:
         """Copy-on-write block ``bi`` of ``slot``: allocate a private

@@ -1,0 +1,28 @@
+"""Known-bad allocator-discipline corpus (RA201..RA205).
+
+This module does NOT define BlockAllocator/PagedKVCache, so it is
+"outside the owning module" for RA204 purposes.
+"""
+
+
+class LeakyBackend:
+    def __init__(self, kv):
+        self.kv = kv
+
+    def grab(self, n):
+        self.kv.allocator.alloc(n)             # RA201: result discarded
+
+    def release(self, slots):
+        for _ in slots:                        # RA202: no release call
+            pass
+
+    def grow(self, slot, tok):
+        self.kv.append_tokens(slot, tok)       # RA203: no demand decl
+
+    def poke(self, slot, n):
+        self.kv.lengths[slot] = n              # RA204: raw pool write
+
+    def admit_shared(self, shared, n):
+        for b in shared:
+            self.kv.allocator.add_ref(b)
+        return shared + self.kv.allocator.alloc(n)   # RA205: no cleanup

@@ -1,0 +1,40 @@
+"""Known-good / suppressed allocator corpus: zero findings expected."""
+
+
+class DisciplinedBackend:
+    def __init__(self, kv):
+        self.kv = kv
+
+    def grab(self, n):
+        blocks = self.kv.allocator.alloc(n)    # result kept
+        return blocks
+
+    def release(self, slots):
+        for s in slots:
+            self.kv.release(s)                 # balanced
+
+    def grow(self, slot, tok):
+        self.kv.append_demand(slot)            # demand declared
+        self.kv.append_tokens(slot, tok)
+
+    def poke(self, slot, n):
+        self.kv.lengths[slot] = n  # ra: ignore[RA204] — fixture suppression
+
+    def admit_shared(self, shared, n):
+        pinned = []
+        try:
+            for b in shared:
+                self.kv.allocator.add_ref(b)
+                pinned.append(b)
+            fresh = self.kv.allocator.alloc(n)
+        except MemoryError:
+            self.kv.allocator.free(pinned)     # rollback: clean
+            raise
+        return shared + fresh
+
+
+class OwnerModuleMarkerless:
+    """A class with no pool contact at all — never checked."""
+
+    def release(self):
+        pass

@@ -1,0 +1,35 @@
+"""Known-bad barrier-scope corpus (RA301/RA302).
+
+The test registers ``Engine`` as a state scope (attrs t_now/steps,
+roots __init__/step) and ``Fleet`` as a vec snapshot scope
+(vec_roots {_step_vec}).
+"""
+
+
+class Engine:
+    def __init__(self):
+        self.t_now = 0.0
+        self.steps = 0
+
+    def step(self):
+        self.steps += 1
+        self._advance(0.1)
+
+    def _advance(self, dt):
+        self.t_now += dt                       # ok: step-rooted
+
+    def poke_clock(self, t):
+        self.t_now = t                         # RA301: outside barrier
+
+
+class Fleet:
+    def __init__(self, engines):
+        self.engines = engines
+
+    def _step_vec(self):
+        for r in range(len(self.engines)):
+            eng = self.engines[r]
+            eng.step()                         # RA302: no _refresh after
+
+    def _refresh(self, r):
+        pass

@@ -1,0 +1,34 @@
+"""Known-good / suppressed barrier-scope corpus: zero findings."""
+
+
+class Engine:
+    def __init__(self):
+        self.t_now = 0.0
+        self.steps = 0
+
+    def step(self):
+        self.steps += 1
+        self._advance(0.1)
+
+    def _advance(self, dt):
+        self.t_now += dt                       # ok: step-rooted
+
+    def force_clock(self, t):
+        self.t_now = t  # ra: ignore[RA301] — fixture: test-only override
+
+
+class Fleet:
+    def __init__(self, engines):
+        self.engines = engines
+
+    def _step_vec(self):
+        self._dispatch()
+        self._refresh(0)                       # caller refreshes: clean
+
+    def _dispatch(self):
+        for r in range(len(self.engines)):
+            eng = self.engines[r]
+            eng.step()
+
+    def _refresh(self, r):
+        pass

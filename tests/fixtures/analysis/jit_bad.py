@@ -1,0 +1,51 @@
+"""Known-bad jit-hazard corpus (RA101/RA102/RA103/RA104).
+
+Never imported — parsed only by repro.analysis tests.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def host_sync_float(x):
+    return float(x) * 2.0                      # RA101
+
+
+@jax.jit
+def host_sync_np(x):
+    return np.asarray(x).sum()                 # RA101
+
+
+@jax.jit
+def host_sync_item(x):
+    return x.item()                            # RA101
+
+
+@jax.jit
+def data_dep_branch(x):
+    if x > 0:                                  # RA102
+        return x
+    return -x
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def bad_static_default(x, opts=[1, 2]):        # RA103
+    return x * len(opts)
+
+
+@jax.jit
+def outer(x):
+    return _helper(x)
+
+
+def _helper(x):
+    return int(x)                              # RA101 (jit-reachable)
+
+
+def hot_account(batch):
+    # registered host_hot path in the fixture registry
+    total = jnp.sum(batch)                     # RA104
+    return total

@@ -1,0 +1,37 @@
+"""Known-good / suppressed jit corpus: everything here must yield zero
+findings (suppressions included)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def shape_branches_ok(x, *, blk=128, interpret=False):
+    n = x.shape[0]
+    pad = (-n) % blk                           # shape-derived: static
+    if pad:                                    # static branch — clean
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    if interpret:                              # static arg — clean
+        x = x + 0
+    return x
+
+
+@jax.jit
+def guards_ok(x, y=None):
+    if y is None:                              # identity check — clean
+        y = jnp.zeros_like(x)
+    if isinstance(x, tuple):                   # isinstance — clean
+        x = x[0]
+    return x + y
+
+
+@jax.jit
+def suppressed_sync(x):
+    return float(x)  # ra: ignore[RA101] — fixture: intentional sync
+
+
+def plain_host_fn(x):
+    # not jit-reachable: host syncs are fine here
+    return float(np.asarray(x).sum())

@@ -1,0 +1,17 @@
+"""Known-bad ref/vec parity corpus (RA401/RA402).
+
+The test declares (go_ref, go_vec) as a module-level pair with no
+allowances.
+"""
+
+
+def go_ref(self, cfg, batch):
+    rate = cfg.ref_only_knob                   # RA401: cfg one-sided
+    out = self._account(batch, rate=rate)
+    return out["tokens"]
+
+
+def go_vec(self, cfg, batch):
+    mask = self._vec_only_mask                 # RA402: attr one-sided
+    out = self._account(batch, rate=1.0, extra=mask)  # RA402: kw extra
+    return out["tokens"] + out["vec_only_key"]        # RA402: key

@@ -1,0 +1,16 @@
+"""Known-good ref/vec parity corpus: symmetric surface plus declared
+allowances (the test's pair allows ``attr:_snap_*`` on the vec side).
+"""
+
+
+def go_ref(self, cfg, batch):
+    rate = cfg.shared_knob
+    out = self._account(batch, rate=rate)
+    return out["tokens"]
+
+
+def go_vec(self, cfg, batch):
+    rate = cfg.shared_knob
+    cached = self._snap_loads                  # allowed: attr:_snap_*
+    out = self._account(batch + cached, rate=rate)
+    return out["tokens"]

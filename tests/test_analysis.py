@@ -1,0 +1,357 @@
+"""Tier-1 gate for ``repro.analysis`` (see ISSUE 7).
+
+Three layers:
+
+* fixture-corpus tests — each RA code family proves at least one true
+  positive and one clean/suppressed case on known snippets;
+* the real-tree gate — the CLI over ``src/`` must be clean against the
+  committed baseline (this is what makes new contract violations fail
+  tier-1);
+* mutation tests — deleting the ``kv.release`` call in
+  ``serving/cache_backend.py`` or adding a vec-only stat to
+  ``fleet/server.py`` must trip the gate (acceptance criteria), which
+  pins the passes to the real tree, not just the fixtures.
+
+Plus regression tests for the findings fixed in this PR (RA204/RA205)
+and the satellite telemetry/CLI-parsing coverage.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import Baseline, run_analysis
+from repro.analysis.findings import Finding, Suppressions, apply_baseline
+from repro.analysis.registry import (RefVecPair, Registry, StateScope,
+                                     VecSnapshotScope)
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+BASELINE = REPO / "tools" / "analysis_baseline.json"
+
+FIXTURE_REGISTRY = Registry(
+    state_scopes=tuple(
+        StateScope(file_suffix=f, cls="Engine",
+                   attrs=frozenset({"t_now", "steps"}),
+                   roots=frozenset({"__init__", "step"}))
+        for f in ("barrier_bad.py", "barrier_clean.py")),
+    vec_scopes=tuple(
+        VecSnapshotScope(file_suffix=f, cls="Fleet",
+                         vec_roots=frozenset({"_step_vec"}))
+        for f in ("barrier_bad.py", "barrier_clean.py")),
+    pairs=(
+        RefVecPair(file_suffix="parity_bad.py", cls=None,
+                   ref="go_ref", vec="go_vec"),
+        RefVecPair(file_suffix="parity_clean.py", cls=None,
+                   ref="go_ref", vec="go_vec",
+                   allow_vec=frozenset({"attr:_snap_*"})),
+    ),
+    host_hot=(("jit_bad.py", "hot_account"),),
+)
+
+
+def fixture_codes(name):
+    res = run_analysis([FIXTURES / name], registry=FIXTURE_REGISTRY)
+    return [f.code for f in res.findings]
+
+
+def cli(args, cwd=None):
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *map(str, args)],
+        capture_output=True, text=True, env=env, cwd=cwd or REPO)
+
+
+# ---------------------------------------------------------------- fixtures
+
+class TestJitHazardFixtures:
+    def test_true_positives(self):
+        codes = fixture_codes("jit_bad.py")
+        assert codes.count("RA101") == 4       # float/np/item + helper
+        assert "RA102" in codes
+        assert "RA103" in codes
+        assert "RA104" in codes
+
+    def test_clean_and_suppressed(self):
+        assert fixture_codes("jit_clean.py") == []
+
+
+class TestAllocatorFixtures:
+    def test_true_positives(self):
+        codes = fixture_codes("alloc_bad.py")
+        for code in ("RA201", "RA202", "RA203", "RA204", "RA205"):
+            assert code in codes, code
+
+    def test_clean_and_suppressed(self):
+        assert fixture_codes("alloc_clean.py") == []
+
+
+class TestBarrierFixtures:
+    def test_true_positives(self):
+        codes = fixture_codes("barrier_bad.py")
+        assert "RA301" in codes
+        assert "RA302" in codes
+
+    def test_clean_and_suppressed(self):
+        assert fixture_codes("barrier_clean.py") == []
+
+
+class TestParityFixtures:
+    def test_true_positives(self):
+        codes = fixture_codes("parity_bad.py")
+        assert codes.count("RA401") == 1       # cfg:ref_only_knob
+        assert codes.count("RA402") >= 3       # attr + kw + key
+
+    def test_clean_with_allowance(self):
+        assert fixture_codes("parity_clean.py") == []
+
+
+# ------------------------------------------------- suppressions / baseline
+
+def test_suppression_parsing():
+    sup = Suppressions([
+        "x = 1",
+        "y = kv.lengths[0]  # ra: ignore[RA204]",
+        "z = 2  # ra: ignore",
+        "w = 3  # ra: ignore[RA101, RA102]",
+    ])
+    assert not sup.suppressed(1, "RA204")
+    assert sup.suppressed(2, "RA204")
+    assert not sup.suppressed(2, "RA201")
+    assert sup.suppressed(3, "RA999")          # blanket
+    assert sup.suppressed(4, "RA102")
+
+
+def test_baseline_roundtrip_and_budget(tmp_path):
+    f1 = Finding("a.py", 10, "RA204", "C.m", "msg")
+    f2 = Finding("a.py", 20, "RA204", "C.m", "msg2")
+    f3 = Finding("b.py", 5, "RA101", "f", "msg3")
+    base = Baseline.from_findings([f1, f2, f3])
+    p = tmp_path / "base.json"
+    base.save(p)
+    loaded = Baseline.load(p)
+    assert loaded.entries == base.entries
+
+    # same counts -> clean, with line drift
+    drifted = [Finding("a.py", 99, "RA204", "C.m", "x"),
+               Finding("a.py", 1, "RA204", "C.m", "y"), f3]
+    new, stale = apply_baseline(drifted, loaded)
+    assert new == [] and stale == []
+
+    # one extra finding in a baselined symbol still fails
+    new, _ = apply_baseline(drifted + [
+        Finding("a.py", 50, "RA204", "C.m", "z")], loaded)
+    assert len(new) == 1
+
+    # fixed finding -> stale entry reported, never failing
+    new, stale = apply_baseline([f3], loaded)
+    assert new == [] and stale == [("RA204", "a.py", "C.m")]
+
+
+def test_baseline_rejects_unknown_version(tmp_path):
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError, match="version"):
+        Baseline.load(p)
+
+
+# ------------------------------------------------------------ CLI behavior
+
+def test_cli_reports_findings_with_exit_1():
+    r = cli([FIXTURES / "alloc_bad.py"])
+    assert r.returncode == 1
+    assert "RA204" in r.stdout
+
+def test_cli_select_filters_codes():
+    r = cli([FIXTURES / "alloc_bad.py", "--select", "RA201"])
+    assert r.returncode == 1
+    assert "RA201" in r.stdout and "RA204" not in r.stdout
+
+def test_cli_rejects_unknown_select_code():
+    r = cli([FIXTURES / "alloc_bad.py", "--select", "RA999"])
+    assert r.returncode == 2
+    assert "unknown code" in r.stderr
+
+def test_cli_missing_baseline_is_usage_error(tmp_path):
+    r = cli([FIXTURES / "alloc_clean.py", "--baseline",
+             tmp_path / "nope.json"])
+    assert r.returncode == 2
+
+
+# ------------------------------------------------------- the tier-1 gate
+
+def test_src_tree_clean_against_committed_baseline():
+    r = cli([SRC, "--baseline", BASELINE])
+    assert r.returncode == 0, f"\n{r.stdout}\n{r.stderr}"
+
+
+def _mutated_src(tmp_path, relpath, old, new):
+    dst = tmp_path / "src"
+    shutil.copytree(SRC, dst)
+    p = dst / relpath
+    text = p.read_text()
+    assert old in text, f"mutation anchor missing from {relpath}"
+    p.write_text(text.replace(old, new))
+    return dst
+
+
+def test_deleting_kv_release_fails_gate(tmp_path):
+    dst = _mutated_src(
+        tmp_path, "repro/serving/cache_backend.py",
+        "self.kv.release(int(s))", "pass")
+    r = cli([dst, "--baseline", BASELINE])
+    assert r.returncode == 1
+    assert "RA202" in r.stdout
+    assert "cache_backend.py" in r.stdout
+
+
+def test_vec_only_stat_fails_gate(tmp_path):
+    dst = _mutated_src(
+        tmp_path, "repro/fleet/server.py",
+        "tokens0 = int(self._snap_tokens.sum())",
+        "tokens0 = int(self._snap_tokens.sum()) + "
+        "int(self._vec_only_stat)")
+    r = cli([dst, "--baseline", BASELINE])
+    assert r.returncode == 1
+    assert "RA402" in r.stdout
+    assert "_vec_only_stat" in r.stdout
+
+
+# --------------------------------------- regressions for this PR's fixes
+
+class TestFixedFindings:
+    def _kv(self, n_blocks=4):
+        from repro.serving.paged_cache import PagedKVCache
+        return PagedKVCache.create(
+            n_layers=1, n_blocks=n_blocks, block_size=4, n_kv_heads=1,
+            head_dim=4, max_requests=2, max_blocks_per_req=8)
+
+    def test_ra205_failed_admit_rolls_back_refs(self):
+        # RA205: admit() pins shared blocks, then allocates the rest;
+        # an alloc failure must release the pins (fixed in this PR)
+        kv = self._kv(n_blocks=3)
+        [b] = kv.allocator.alloc(1)            # stands in for a cached block
+        before = kv.allocator.ref_count(b)
+        free_before = kv.allocator.n_free
+        with pytest.raises(MemoryError):
+            kv.admit(1, prompt_len=4 * 4, shared=(b,))  # needs 3 fresh, 2 free
+        assert kv.allocator.ref_count(b) == before
+        assert kv.allocator.n_free == free_before
+
+    def test_ra204_set_length_and_adopt_blocks(self):
+        # RA204: backends rebind slots via the pool API now, not raw
+        # writes to kv internals — pin the API behavior
+        kv = self._kv()
+        blocks = kv.allocator.alloc(2)
+        kv.adopt_blocks(0, blocks, 7)
+        assert kv.lengths[0] == 7
+        assert list(kv.block_tables[0, :2]) == list(blocks)
+        assert kv.block_tables[0, 2] == -1
+        assert kv.req_blocks[0] == list(blocks)
+        kv.set_length(0, 9)
+        assert kv.lengths[0] == 9
+
+    def test_ra204_prefix_note_lookup(self):
+        from repro.serving.paged_cache import PrefixIndex
+        idx = PrefixIndex()
+        idx.note_lookup(4, 2)
+        idx.note_lookup(1, 0)
+        assert (idx.queries, idx.hits) == (5, 2)
+
+
+# --------------------------------------------- satellite: telemetry schema
+
+class TestTelemetrySchema:
+    def _tel(self):
+        from repro.fleet.telemetry import FleetTelemetry
+        tel = FleetTelemetry()
+        tel.record_request(rid=0, replica=0, status="done",
+                           t_arrival=0.0, t_routed=0.0, ttft=0.1,
+                           tpot=0.05, latency=0.5, n_prompt=4,
+                           n_generated=8)
+        return tel
+
+    def test_roundtrip_carries_schema_version(self, tmp_path):
+        from repro.fleet.telemetry import SCHEMA_VERSION, FleetTelemetry
+        p = tmp_path / "run.jsonl"
+        self._tel().write_jsonl(p)
+        meta = json.loads(p.read_text().splitlines()[0])
+        assert meta["schema_version"] == SCHEMA_VERSION
+        tel2 = FleetTelemetry.read_jsonl(p)
+        assert len(tel2.requests) == 1
+
+    def test_reader_rejects_unknown_version(self, tmp_path):
+        from repro.fleet.telemetry import FleetTelemetry
+        p = tmp_path / "run.jsonl"
+        self._tel().write_jsonl(p)
+        lines = p.read_text().splitlines()
+        meta = json.loads(lines[0])
+        meta["schema_version"] = 99
+        p.write_text("\n".join([json.dumps(meta)] + lines[1:]) + "\n")
+        with pytest.raises(ValueError, match="schema_version"):
+            FleetTelemetry.read_jsonl(p)
+
+    def test_reader_rejects_missing_version(self, tmp_path):
+        # a pre-versioning export must fail up front, not with a
+        # KeyError deep in summary validation
+        from repro.fleet.telemetry import FleetTelemetry
+        p = tmp_path / "run.jsonl"
+        self._tel().write_jsonl(p)
+        lines = p.read_text().splitlines()
+        meta = json.loads(lines[0])
+        del meta["schema_version"]
+        p.write_text("\n".join([json.dumps(meta)] + lines[1:]) + "\n")
+        with pytest.raises(ValueError, match="schema_version"):
+            FleetTelemetry.read_jsonl(p)
+
+
+# ------------------------------------------- satellite: CLI parse coverage
+
+class TestReplicaClassParsing:
+    def _parse(self, spec):
+        from repro.launch.serve import parse_replica_classes
+        from repro.serving import EngineConfig
+        return parse_replica_classes(spec, EngineConfig())
+
+    def test_valid_spec(self):
+        classes = self._parse("2xg1b2,1xg2b4")
+        assert [(c, ec.n_workers, ec.slots_per_worker)
+                for c, ec in classes] == [(2, 1, 2), (1, 2, 4)]
+
+    @pytest.mark.parametrize("spec", [
+        "2xg1b", "xg1b2", "2x1b2", "2xg1b2x", "g1b2", "2,2xg1b2", ""])
+    def test_rejects_malformed(self, spec):
+        with pytest.raises(ValueError,
+                           match=r"bad replica class .* \(want e\.g\. "
+                                 r"'2xg1b2'\)"):
+            self._parse(spec)
+
+
+class TestBenchSectionsValidation:
+    def test_unknown_section_rejected(self):
+        from benchmarks.balancer_bench import run
+        with pytest.raises(ValueError, match="unknown bench sections"):
+            run(smoke=True, sections={"bogus"})
+
+    def test_unknown_section_names_known_ones(self):
+        from benchmarks.balancer_bench import ALL_SECTIONS, run
+        with pytest.raises(ValueError, match="solver"):
+            run(smoke=True, sections={"nope"})
+        assert "fleet" in ALL_SECTIONS
+
+
+# --------------------------------------------------- satellite: ruff gate
+
+def test_ruff_curated_rules_clean():
+    ruff = shutil.which("ruff")
+    if ruff is None:
+        pytest.skip("ruff not installed in this environment")
+    r = subprocess.run([ruff, "check", str(SRC), str(REPO / "benchmarks")],
+                       capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, r.stdout
