@@ -671,6 +671,143 @@ def _fleet_scale_pod_case(R: int, G: int, B: int, *, pods: int,
     return row
 
 
+def _fleet_async_compat_case(R: int, G: int, B: int, *, n_requests: int,
+                             routers=("round_robin", "least_loaded",
+                                      "pod2", "bfio"),
+                             load_factor: float = 0.8,
+                             seed: int = 0) -> list[dict]:
+    """``AsyncFleetServer(barrier_compat=True)`` vs ``FleetServer`` on
+    the same stream: the async subsystem's parity oracle — stats,
+    telemetry, and generations must all be bit-identical, per router."""
+    from repro.fleet import AsyncFleetServer, FleetTelemetry, make_scenario
+    from repro.serving import EngineConfig
+
+    st = _fleet_scale_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                      **FLEET_TIMING)
+    sc = make_scenario("flash_crowd", n_requests=n_requests, n_replicas=R,
+                       n_workers=G, slots_per_worker=B, max_seq_len=64,
+                       vocab_size=128, seed=seed,
+                       load_factor=load_factor, **FLEET_TIMING)
+    rows = []
+    for router in routers:
+        stats, tels, gens = {}, {}, {}
+        for mode in ("barrier", "compat"):
+            tel = FleetTelemetry()
+            if mode == "barrier":
+                fs = _fleet_scale_server(st, ec, sc, R=R, router=router,
+                                         mode="vec", telemetry=tel)
+            else:
+                fs = AsyncFleetServer(
+                    st["cfg"], st["params"], ec, n_replicas=R,
+                    router=router, policy="bfio_h0", mesh=st["mesh"],
+                    telemetry=tel, barrier_compat=True)
+                fs.submit_scenario(sc)
+            stats[mode] = fs.run(max_steps=500_000)
+            tels[mode] = tel
+            gens[mode] = [r.generated for r in fs.requests]
+        rows.append({
+            "section": "fleet_async", "kind": "compat",
+            "scenario": sc.name, "R": R, "G": G, "B": B,
+            "router": router, "n_requests": sc.n_requests,
+            "load_factor": load_factor,
+            "steps": stats["barrier"]["steps"],
+            "completed": stats["compat"]["completed"],
+            "failed": stats["compat"]["failed"],
+            "stats_equal": stats["barrier"] == stats["compat"],
+            "telemetry_equal": (
+                tels["barrier"].steps == tels["compat"].steps
+                and tels["barrier"].requests == tels["compat"].requests
+                and tels["barrier"].summary() == tels["compat"].summary()),
+            "gens_equal": gens["barrier"] == gens["compat"]})
+    return rows
+
+
+def _fleet_async_diurnal_case(R: int, G: int, B: int, *, n_requests: int,
+                              router: str = "bfio",
+                              load_factor: float = 0.35,
+                              target: float = 0.7,
+                              interval_s: float = 0.05,
+                              warmup_s: float = 0.02, seed: int = 5,
+                              jsonl_dir: str | None = None) -> dict:
+    """The headline claim: fixed-R barrier fleet vs autoscaled async
+    fleet on the diurnal scenario, paged engines with host-staged swap
+    so drain handoffs are bit-exact.  The async fleet must cut idle
+    energy and energy-per-token at equal-or-better SLO attainment with
+    zero failures, zero tokens lost across drains, and generations
+    identical to the run that never scaled."""
+    from repro.fleet import (
+        AsyncFleetServer,
+        FleetTelemetry,
+        SLOSpec,
+        TargetUtilizationAutoscaler,
+        make_scenario,
+    )
+    from repro.serving import EngineConfig
+
+    st = _fleet_scale_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                      cache_backend="paged", paged_block_size=16,
+                      preemption_mode="swap", **FLEET_TIMING)
+    sc = make_scenario("diurnal", n_requests=n_requests, n_replicas=R,
+                       n_workers=G, slots_per_worker=B, max_seq_len=64,
+                       vocab_size=128, seed=seed,
+                       load_factor=load_factor, **FLEET_TIMING)
+    slo = SLOSpec(ttft_s=0.5, tpot_s=0.1)
+
+    tel_b = FleetTelemetry(slo=slo)
+    fb = _fleet_scale_server(st, ec, sc, R=R, router=router, mode="vec",
+                             telemetry=tel_b)
+    stats_b = fb.run(max_steps=500_000)
+    sum_b = tel_b.summary()
+
+    tel_a = FleetTelemetry(slo=slo)
+    auto = TargetUtilizationAutoscaler(
+        r_min=1, r_max=R, target=target, interval_s=interval_s,
+        warmup_s=warmup_s)
+    fa = AsyncFleetServer(
+        st["cfg"], st["params"], ec, n_replicas=R, router=router,
+        policy="bfio_h0", mesh=st["mesh"], telemetry=tel_a,
+        autoscaler=auto, max_snapshot_age=interval_s)
+    fa.submit_scenario(sc)
+    stats_a = fa.run(max_steps=500_000)
+    sum_a = tel_a.summary()
+    if jsonl_dir is not None:
+        tel_a.write_jsonl(os.path.join(
+            jsonl_dir, f"fleet_async_diurnal_R{R}.jsonl"))
+
+    return {
+        "section": "fleet_async", "kind": "diurnal",
+        "scenario": sc.name, "R": R, "G": G, "B": B, "router": router,
+        "n_requests": sc.n_requests, "load_factor": load_factor,
+        "target_util": target, "interval_s": interval_s,
+        "warmup_s": warmup_s,
+        "barrier_idle_j": stats_b["idle_j"],
+        "barrier_energy_per_token": stats_b["energy_per_token"],
+        "barrier_slo_attainment": sum_b["slo_attainment"],
+        "barrier_completed": stats_b["completed"],
+        "barrier_failed": stats_b["failed"],
+        "barrier_tokens": stats_b["tokens"],
+        "barrier_steps": stats_b["steps"],
+        "async_idle_j": stats_a["idle_j"],
+        "async_energy_per_token": stats_a["energy_per_token"],
+        "async_slo_attainment": sum_a["slo_attainment"],
+        "async_completed": stats_a["completed"],
+        "async_failed": stats_a["failed"],
+        "async_tokens": stats_a["tokens"],
+        "async_steps": stats_a["steps"],
+        "idle_saving": 1.0 - (stats_a["idle_j"]
+                              / max(stats_b["idle_j"], 1e-12)),
+        "drain_handoffs": stats_a["drain_handoffs"],
+        "tokens_lost": stats_a["drain_tokens_lost"],
+        "scale_ups": stats_a["scale_ups"],
+        "scale_downs": stats_a["scale_downs"],
+        "r_on_mean": stats_a["r_on_mean"],
+        "gens_equal": ([r.generated for r in fa.requests]
+                       == [r.generated for r in fb.requests]),
+    }
+
+
 _STALL_STATE: dict = {}
 
 
@@ -780,7 +917,7 @@ def _engine_stall_case(G: int, B: int, *, chunk: int = 8,
 
 
 ALL_SECTIONS = ("solver", "simulator", "batch", "engine", "engine_paged",
-                "engine_preempt", "fleet", "fleet_scale")
+                "engine_preempt", "fleet", "fleet_scale", "fleet_async")
 
 
 def run(full: bool = False, smoke: bool = False,
@@ -811,6 +948,11 @@ def run(full: bool = False, smoke: bool = False,
                          routers=("round_robin", "bfio"))
         fscale_pod_shape = (16, 1, 2)
         fscale_pod_kw = dict(pods=4, n_requests=48)
+        fasync_compat_shape = (2, 1, 2)     # R, G, B
+        fasync_compat_kw = dict(n_requests=12,
+                                routers=("round_robin", "bfio"))
+        fasync_diurnal_shape = (4, 2, 4)    # R, G, B
+        fasync_diurnal_kw = dict(n_requests=24, load_factor=0.4)
         n_rounds, iters = 2.0, 2
     else:
         solver_grid = [(G, N) for G in (64, 256, 1024)
@@ -836,6 +978,14 @@ def run(full: bool = False, smoke: bool = False,
         fscale_pod_shape = (256, 1, 2)
         fscale_pod_kw = dict(
             pods=16, n_requests=384,
+            jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
+        fasync_compat_shape = (8, 1, 2)
+        fasync_compat_kw = dict(
+            n_requests=48,
+            routers=("round_robin", "least_loaded", "pod2", "bfio"))
+        fasync_diurnal_shape = (8, 2, 4)
+        fasync_diurnal_kw = dict(
+            n_requests=96, load_factor=0.35,
             jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
         n_rounds, iters = 4.0, 10
 
@@ -939,6 +1089,25 @@ def run(full: bool = False, smoke: bool = False,
               f"pod_bfio={r['pod_bfio_imbalance']:7.1f}  "
               f"failed={r['pod_bfio_failed']}  win={r['pod_wins']}",
               flush=True)
+    if "fleet_async" in sections:
+        for r in _fleet_async_compat_case(*fasync_compat_shape,
+                                          **fasync_compat_kw):
+            rows.append(r)
+            print(f"  fasync compat {r['router']:<13s} R={r['R']} "
+                  f"stats_equal={r['stats_equal']} "
+                  f"telemetry_equal={r['telemetry_equal']} "
+                  f"gens_equal={r['gens_equal']}", flush=True)
+        r = _fleet_async_diurnal_case(*fasync_diurnal_shape,
+                                      **fasync_diurnal_kw)
+        rows.append(r)
+        print(f"  fasync diurnal R={r['R']} "
+              f"idle {r['barrier_idle_j']:7.1f}->{r['async_idle_j']:7.1f}J "
+              f"J/tok {r['barrier_energy_per_token']:.3f}->"
+              f"{r['async_energy_per_token']:.3f} "
+              f"slo {r['barrier_slo_attainment']:.2f}->"
+              f"{r['async_slo_attainment']:.2f} "
+              f"handoffs={r['drain_handoffs']} lost={r['tokens_lost']} "
+              f"gens_equal={r['gens_equal']}", flush=True)
 
     doc = {
         "meta": {
@@ -959,7 +1128,10 @@ def run(full: bool = False, smoke: bool = False,
                     "section) / two-tier routing across engine replicas "
                     "(fleet section) / vectorized fleet hot path "
                     "(fleet_mode='vec') with hierarchical pod routing "
-                    "at R in the hundreds (fleet_scale section)",
+                    "at R in the hundreds (fleet_scale section) / "
+                    "event-driven async fleet with SLO-driven "
+                    "autoscaling and bit-exact drain handoff "
+                    "(fleet_async section)",
         },
         "rows": rows,
     }

@@ -78,6 +78,17 @@ FSCALE_MIN_R = 64           # the speedup grid must reach this R
 FSCALE_MIN_SPEEDUP = 5.0    # best router at R >= FSCALE_MIN_R
 FSCALE_MIN_EACH = 0.8       # no router may regress under vec
 FSCALE_POD_MIN_R = 256      # the pod-routed run must reach this R
+FASYNC_COMPAT_KEYS = {"scenario", "R", "G", "B", "router", "n_requests",
+                      "load_factor", "steps", "completed", "failed",
+                      "stats_equal", "telemetry_equal", "gens_equal"}
+FASYNC_DIURNAL_KEYS = {"scenario", "R", "G", "B", "router", "n_requests",
+                       "load_factor", "target_util", "interval_s",
+                       "warmup_s", "idle_saving", "drain_handoffs",
+                       "tokens_lost", "scale_ups", "scale_downs",
+                       "r_on_mean", "gens_equal"} | {
+    f"{side}_{m}" for side in ("barrier", "async")
+    for m in ("idle_j", "energy_per_token", "slo_attainment",
+              "completed", "failed", "tokens", "steps")}
 
 
 def _finite_pos(x) -> bool:
@@ -141,6 +152,10 @@ def check(doc: dict) -> None:
                  f"R >= {FSCALE_MIN_R} (need {FSCALE_MIN_SPEEDUP}x)")
             assert any(r["R"] >= FSCALE_POD_MIN_R for r in pod), \
                 f"no pod-routed run at R >= {FSCALE_POD_MIN_R}"
+    if "fleet_async" in expected:
+        fa_kinds = {r.get("kind") for r in rows
+                    if r.get("section") == "fleet_async"}
+        assert fa_kinds == {"compat", "diurnal"}, fa_kinds
     for r in rows:
         sec = r["section"]
         if sec == "solver":
@@ -277,6 +292,49 @@ def check(doc: dict) -> None:
                         (f"pod_bfio imbalance {r['pod_bfio_imbalance']:.1f}"
                          f" not below flat round_robin "
                          f"{r['round_robin_imbalance']:.1f} at R={r['R']}")
+        elif sec == "fleet_async":
+            if r.get("kind") == "compat":
+                assert FASYNC_COMPAT_KEYS <= set(r), \
+                    FASYNC_COMPAT_KEYS - set(r)
+                # the parity oracle holds at every shape, smoke included:
+                # barrier_compat=True reproduces FleetServer bit-for-bit
+                assert r["stats_equal"] is True, \
+                    "async barrier_compat stats diverged from FleetServer"
+                assert r["telemetry_equal"] is True, \
+                    "async barrier_compat telemetry diverged"
+                assert r["gens_equal"] is True, \
+                    "async barrier_compat generations diverged"
+                assert r["failed"] == 0
+                assert r["completed"] == r["n_requests"]
+            else:
+                assert r.get("kind") == "diurnal", r.get("kind")
+                assert FASYNC_DIURNAL_KEYS <= set(r), \
+                    FASYNC_DIURNAL_KEYS - set(r)
+                # correctness gates hold at every shape: nothing fails,
+                # drain handoffs lose no work, and the autoscaled run's
+                # generations match the fixed-R run bit-for-bit
+                assert r["barrier_failed"] == 0
+                assert r["async_failed"] == 0
+                assert r["async_completed"] == r["n_requests"]
+                assert r["tokens_lost"] == 0, \
+                    f"drain handoffs recomputed {r['tokens_lost']} tokens"
+                assert r["gens_equal"] is True, \
+                    "autoscaling changed generations"
+                assert 0.0 <= r["async_slo_attainment"] <= 1.0
+                if not doc["meta"].get("smoke"):
+                    # THE fleet_async gates, full grid only: the elastic
+                    # fleet pays — less idle energy and a lower J/token
+                    # at equal-or-better SLO attainment
+                    assert r["async_idle_j"] < r["barrier_idle_j"], \
+                        (r["async_idle_j"], r["barrier_idle_j"])
+                    assert (r["async_energy_per_token"]
+                            < r["barrier_energy_per_token"]), \
+                        (r["async_energy_per_token"],
+                         r["barrier_energy_per_token"])
+                    assert (r["async_slo_attainment"]
+                            >= r["barrier_slo_attainment"]), \
+                        (r["async_slo_attainment"],
+                         r["barrier_slo_attainment"])
 
 
 def run_smoke(sections=None) -> dict:

@@ -93,6 +93,7 @@ class Registry:
 
 _ENGINE = "serving/engine.py"
 _FLEET = "fleet/server.py"
+_ASYNC = "fleet/async_server.py"
 
 DEFAULT_REGISTRY = Registry(
     state_scopes=(
@@ -105,9 +106,11 @@ DEFAULT_REGISTRY = Registry(
                 "slot_tokens", "slot_load", "slot_age", "slot_max_new",
                 "slot_eos", "slot_admit_seq", "_admit_seq", "slot_req",
             }),
-            # submit is a documented pre-step entry point; __init__
-            # declares; everything else must flow from step()/run()
-            roots=frozenset({"__init__", "step", "run", "submit"}),
+            # submit is a documented pre-step entry point, drain the
+            # fleet scale-down one; __init__ declares; everything else
+            # must flow from step()/run()
+            roots=frozenset({"__init__", "step", "run", "submit",
+                             "drain"}),
         ),
         StateScope(
             file_suffix=_FLEET, cls="FleetServer",
@@ -117,6 +120,22 @@ DEFAULT_REGISTRY = Registry(
                 "_prev_prefix_hits", "_queue", "_live", "_seq",
             }),
             attr_prefixes=("_snap_",),
+            roots=frozenset({"__init__", "step", "run", "submit",
+                             "submit_scenario"}),
+        ),
+        StateScope(
+            file_suffix=_ASYNC, cls="AsyncFleetServer",
+            # inherited barrier state the async tick also writes, plus
+            # the event-heap (`_ev_*`), replica-lifecycle (`_rs_*`),
+            # autoscaler-window (`_as_*`), tick-accumulator (`_tick_*`)
+            # and snapshot-timestamp (`_snap_*`) families
+            attrs=frozenset({
+                "t_now", "steps", "idle_j", "imbalance_sum",
+                "_queue", "_live", "_prev_preemptions",
+                "_prev_prefix_hits", "barrier_compat", "autoscaler",
+                "max_snapshot_age", "record_routes", "route_log",
+            }),
+            attr_prefixes=("_ev_", "_rs_", "_as_", "_tick_", "_snap_"),
             roots=frozenset({"__init__", "step", "run", "submit",
                              "submit_scenario"}),
         ),
@@ -160,6 +179,20 @@ DEFAULT_REGISTRY = Registry(
             allow_ref=frozenset({"attr:engines"}),
             allow_vec=frozenset({"attr:_refresh", "attr:_snap_*"}),
         ),
+        RefVecPair(
+            file_suffix=_ASYNC, cls="AsyncFleetServer",
+            ref="_step_barrier", vec="_step_async",
+            # the oracle side delegates wholesale to the inherited
+            # barrier step; the async side's tick pipeline is its
+            # declared (audited) surface — growing the tick beyond
+            # these seams must be declared here
+            allow_vec=frozenset({
+                "attr:_next_time", "attr:_advance", "attr:_pop_events",
+                "attr:_release_arrivals", "attr:_autoscale_due",
+                "attr:_route_async", "attr:_start_pending",
+                "attr:_record_tick",
+            }),
+        ),
         # the BF-IO swap-search backends (method="dense" vs the tiled
         # default) — module-level pair, gated bit-identical by
         # tests/test_bfio_swap.py
@@ -177,5 +210,9 @@ DEFAULT_REGISTRY = Registry(
         (_FLEET, "FleetServer._step_vec"),
         (_FLEET, "FleetServer._account"),
         (_FLEET, "FleetServer._dispatch"),
+        (_ASYNC, "AsyncFleetServer._step_async"),
+        (_ASYNC, "AsyncFleetServer._advance"),
+        (_ASYNC, "AsyncFleetServer._route_async"),
+        (_ASYNC, "AsyncFleetServer._record_tick"),
     ),
 )

@@ -6,9 +6,20 @@ behind a pluggable :class:`~repro.fleet.router.FleetRouter`
 solver / two-level hierarchical pod BF-IO for R in the hundreds),
 driven barrier-stepped by :class:`~repro.fleet.server.FleetServer`
 (``fleet_mode="vec"`` hot path with a bit-identical ``"ref"``
-baseline), fed by the named scenario traces of
-:mod:`repro.fleet.workloads`, and observed through the JSONL-exporting
-:mod:`repro.fleet.telemetry` subsystem."""
+baseline) or event-driven by
+:class:`~repro.fleet.async_server.AsyncFleetServer` (per-replica
+clocks, staleness-bounded routing, optional
+:mod:`repro.fleet.autoscale` policies with bit-exact drain handoff,
+and a ``barrier_compat`` parity oracle), fed by the named scenario
+traces of :mod:`repro.fleet.workloads`, and observed through the
+JSONL-exporting :mod:`repro.fleet.telemetry` subsystem."""
+from .async_server import AsyncFleetServer  # noqa: F401
+from .autoscale import (  # noqa: F401
+    Autoscaler,
+    SLOAutoscaler,
+    TargetUtilizationAutoscaler,
+    make_autoscaler,
+)
 from .router import (  # noqa: F401
     BFIORouter,
     FleetRouter,

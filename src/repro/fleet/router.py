@@ -91,6 +91,12 @@ class RouterContext:
     # when the fleet has no predictor.  Routers that opt in (pred_weight
     # > 0) add it to each candidate's placement size.
     pred_out: Optional[np.ndarray] = None
+    # (R,) seconds since each routable replica's load view was last
+    # refreshed.  The barrier fleet routes against just-gathered
+    # snapshots (None == implicitly fresh); the async fleet refreshes
+    # on step completion, so its router sees bounded-stale loads and
+    # this field says how stale.  Routers may discount accordingly.
+    snapshot_age: Optional[np.ndarray] = None
 
     @property
     def R(self) -> int:

@@ -207,25 +207,39 @@ class FleetServer:
                          for _, req in self._queue])
 
     def _dispatch(self, loads: np.ndarray, counts: np.ndarray,
-                  free: np.ndarray) -> set:
+                  free: np.ndarray, *, eligible=None,
+                  snapshot_age=None) -> set:
         """Route every due candidate given the committed per-replica
         state; returns the set of replicas submitted to.  Shared by both
-        fleet modes — identical context in, identical assignment out."""
+        fleet modes — identical context in, identical assignment out.
+
+        ``eligible`` (optional, async fleet) restricts routing to a
+        subset of replica ids: the router sees only the subset's rows
+        (its world is ``len(eligible)`` replicas) and the returned
+        subset-space assignment is mapped back to fleet ids here —
+        draining / not-yet-warm replicas are unroutable by
+        construction.  ``snapshot_age`` annotates the same rows with
+        the staleness of their load views (:class:`RouterContext`)."""
         ctx = RouterContext(
             k=self.steps, loads=loads, counts=counts, free_slots=free,
             wait_sizes=np.array([float(len(r.tokens))
                                  for _, r in self._queue]),
             drift=self.engines[0].drift, rng=self.rng,
-            capacity=self._capacity, pred_out=self._pred_out())
+            capacity=(self._capacity if eligible is None
+                      else self._capacity[eligible]),
+            pred_out=self._pred_out(), snapshot_age=snapshot_age)
         assign = np.asarray(self.router.route(ctx))
+        n_route = self.R if eligible is None else len(eligible)
         if assign.shape != (len(self._queue),) or (assign < 0).any() \
-                or (assign >= self.R).any():
+                or (assign >= n_route).any():
             raise ValueError(
                 f"router {self.router.name!r} returned an invalid "
                 f"assignment (shape {assign.shape}, range "
                 f"[{assign.min() if assign.size else 0}, "
                 f"{assign.max() if assign.size else 0}]) for "
-                f"{len(self._queue)} candidates over {self.R} replicas")
+                f"{len(self._queue)} candidates over {n_route} replicas")
+        if eligible is not None:
+            assign = np.asarray(eligible)[assign]
         touched = set()
         for (t_arrival, req), g in zip(self._queue, assign):
             g = int(g)
@@ -331,7 +345,8 @@ class FleetServer:
                 replica_active=active, replica_waiting=waiting,
                 cross_imbalance=imb, energy_j=float(de.sum()),
                 idle_j=idle, tokens=tokens,
-                preemptions=d_preempt, prefix_hits=d_hits)
+                preemptions=d_preempt, prefix_hits=d_hits,
+                replica_count=self.R, replica_busy=dts)
         return {"t": self.t_now, "dt": dt, "imbalance": imb,
                 "tokens": tokens, "idle_j": idle,
                 "waiting": len(self._pending) + len(self._queue) + queued,

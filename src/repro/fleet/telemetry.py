@@ -19,9 +19,21 @@ telemetry object (gated by ``tests/test_fleet.py``).  The ``fleet``
 section of ``benchmarks/balancer_bench.py`` consumes these summaries.
 
 The meta record carries ``schema_version`` (:data:`SCHEMA_VERSION`);
-the reader rejects files written under any other version up front,
-instead of failing later with an opaque ``KeyError`` on a reshaped
-record.  Bump the constant whenever a record's key set changes.
+the reader accepts any version in :data:`ACCEPTED_VERSIONS` and rejects
+everything else up front, instead of failing later with an opaque
+``KeyError`` on a reshaped record.  Bump the constant whenever a
+record's key set changes.
+
+Version history:
+
+* **1** — per-step fleet records + per-request records (PR 5);
+* **2** — step records gain ``replica_count`` (routable replicas when
+  the row was cut — the autoscaler's R-over-time series) and
+  ``replica_busy`` (per-replica busy seconds in the interval), and
+  :meth:`summary` derives ``replica_count`` stats and per-replica
+  utilization from them.  Version-1 files (no such keys) read back
+  unchanged — the derived fields are simply absent, so their stored
+  summaries still validate.
 """
 from __future__ import annotations
 
@@ -32,9 +44,10 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["SLOSpec", "FleetTelemetry", "percentiles",
-           "SCHEMA_VERSION"]
+           "SCHEMA_VERSION", "ACCEPTED_VERSIONS"]
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+ACCEPTED_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +90,8 @@ class FleetTelemetry:
 
     STEP_KEYS = ("step", "t", "dt", "replica_loads", "replica_active",
                  "replica_waiting", "cross_imbalance", "energy_j",
-                 "idle_j", "tokens", "preemptions", "prefix_hits")
+                 "idle_j", "tokens", "preemptions", "prefix_hits",
+                 "replica_count", "replica_busy")
     REQUEST_KEYS = ("rid", "replica", "status", "error", "t_arrival",
                     "t_routed", "ttft", "tpot", "latency", "n_prompt",
                     "n_generated")
@@ -133,6 +147,19 @@ class FleetTelemetry:
         }
         for key in ("ttft", "tpot", "latency"):
             out[key] = percentiles([r[key] for r in done])
+        # v2 series (absent from v1 files: the derived fields are then
+        # omitted, so v1 stored summaries still validate on read-back)
+        counts = [s.get("replica_count") for s in self.steps]
+        if counts and all(c is not None for c in counts):
+            out["replica_count"] = {
+                "mean": float(np.mean(counts)),
+                "min": int(min(counts)), "max": int(max(counts)),
+            }
+        busy = [s.get("replica_busy") for s in self.steps]
+        if busy and all(b is not None for b in busy):
+            per = np.asarray(busy, dtype=np.float64).sum(axis=0)
+            t = max(self.steps[-1]["t"], 1e-12)
+            out["replica_utilization"] = [float(x) for x in per / t]
         return _jsonify(out)
 
     # -- JSONL export / import -----------------------------------------
@@ -161,12 +188,12 @@ class FleetTelemetry:
                 kind = rec.pop("kind")
                 if kind == "meta":
                     version = rec.get("schema_version")
-                    if version != SCHEMA_VERSION:
+                    if version not in ACCEPTED_VERSIONS:
                         raise ValueError(
                             f"{path}: telemetry schema_version "
                             f"{version!r} not supported (reader "
-                            f"expects {SCHEMA_VERSION}); re-export "
-                            "the run with this version")
+                            f"accepts {ACCEPTED_VERSIONS}); re-export "
+                            "the run with a supported version")
                     tel = cls(slo=SLOSpec(**rec["slo"]),
                               record_steps=rec["record_steps"])
                 elif kind == "step":

@@ -25,6 +25,20 @@ to JSONL.  Fleet scaling knobs:
   as a predicted output length (the BF-IO growth term then prices
   decode, not just prefill).
 
+Async / autoscaling knobs (event-driven fleet):
+
+* ``--async`` swaps the barrier-stepped fleet for the event-driven
+  :class:`~repro.fleet.async_server.AsyncFleetServer` — per-replica
+  clocks, staleness-bounded routing snapshots.
+* ``--autoscale util|slo`` (implies ``--async``) closes the replica-
+  count control loop: ``util`` holds windowed busy-fraction near a
+  target, ``slo`` scales on windowed SLO attainment.  ``--r-min`` /
+  ``--r-max`` bound the fleet size (``--r-max 0`` = ``--replicas``);
+  draining replicas hand resident requests off bit-exactly via the
+  paged backend's host-staged swap path.
+* ``--slo-ttft`` / ``--slo-tpot`` set the SLO the telemetry scorecard
+  (and the ``slo`` autoscaler) attains against.
+
 Memory-pressure knobs (``--cache-backend paged`` only):
 
 * ``--pool-blocks N`` sizes the shared KV block pool below the
@@ -51,7 +65,14 @@ import numpy as np
 
 from ..configs import get_config, get_smoke_config
 from ..core import make_policy
-from ..fleet import FleetServer, FleetTelemetry, make_scenario
+from ..fleet import (
+    AsyncFleetServer,
+    FleetServer,
+    FleetTelemetry,
+    SLOSpec,
+    make_autoscaler,
+    make_scenario,
+)
 from ..fleet.workloads import SCENARIOS as FLEET_SCENARIOS
 from ..models import init_params, split_params
 from ..serving import EngineConfig, ServeRequest, ServingEngine
@@ -84,14 +105,22 @@ def serve_fleet(args, cfg, params, engine_cfg, mesh) -> None:
         if args.replica_classes else None
     n_replicas = sum(c for c, _ in classes) if classes \
         else args.replicas
-    telemetry = FleetTelemetry()
-    fleet = FleetServer(cfg, params, engine_cfg,
-                        n_replicas=args.replicas, router=router,
-                        policy=args.policy, mesh=mesh,
-                        telemetry=telemetry, seed=args.seed,
-                        fleet_mode=args.fleet_mode,
-                        replica_classes=classes,
-                        predictor=args.predictor)
+    telemetry = FleetTelemetry(
+        slo=SLOSpec(ttft_s=args.slo_ttft, tpot_s=args.slo_tpot))
+    common = dict(n_replicas=args.replicas, router=router,
+                  policy=args.policy, mesh=mesh, telemetry=telemetry,
+                  seed=args.seed, fleet_mode=args.fleet_mode,
+                  replica_classes=classes, predictor=args.predictor)
+    if args.async_fleet or args.autoscale:
+        autoscaler = None
+        if args.autoscale:
+            r_max = args.r_max or n_replicas
+            autoscaler = make_autoscaler(
+                args.autoscale, r_min=args.r_min, r_max=r_max)
+        fleet = AsyncFleetServer(cfg, params, engine_cfg,
+                                 autoscaler=autoscaler, **common)
+    else:
+        fleet = FleetServer(cfg, params, engine_cfg, **common)
     if args.scenario:
         sc = make_scenario(
             args.scenario, n_requests=args.requests,
@@ -127,6 +156,14 @@ def serve_fleet(args, cfg, params, engine_cfg, mesh) -> None:
           f"TTFT p95 {_s(summary['ttft']['p95'])}, "
           f"latency p95 {_s(summary['latency']['p95'])}, "
           f"SLO attainment {summary['slo_attainment']:.0%}")
+    if stats.get("fleet_kind") == "async":
+        print(f"[fleet] async: utilization {stats['utilization']:.0%}, "
+              f"mean replicas on {stats['r_on_mean']:.2f}/"
+              f"{stats['n_replicas']}, "
+              f"{stats['scale_ups']} scale-ups / "
+              f"{stats['scale_downs']} scale-downs, "
+              f"{stats['drain_handoffs']} drain handoffs "
+              f"({stats['drain_tokens_lost']} tokens recomputed)")
     if args.telemetry_out:
         telemetry.write_jsonl(args.telemetry_out)
         print(f"[fleet] telemetry -> {args.telemetry_out} "
@@ -196,6 +233,24 @@ def main() -> None:
                     help="predicted-output-length router term: 'oracle' "
                          "feeds each request's decode budget to the "
                          "BF-IO growth model")
+    ap.add_argument("--async", dest="async_fleet", action="store_true",
+                    help="event-driven fleet (per-replica clocks, "
+                         "staleness-bounded routing) instead of the "
+                         "barrier-stepped FleetServer")
+    ap.add_argument("--autoscale", default=None,
+                    choices=["util", "slo"],
+                    help="autoscaling policy (implies --async): hold "
+                         "windowed utilization near target (util) or "
+                         "scale on windowed SLO attainment (slo)")
+    ap.add_argument("--r-min", type=int, default=1,
+                    help="autoscaler floor on active replicas")
+    ap.add_argument("--r-max", type=int, default=0,
+                    help="autoscaler ceiling on active replicas "
+                         "(0 = --replicas)")
+    ap.add_argument("--slo-ttft", type=float, default=1.0,
+                    help="SLO bound on time-to-first-token (s)")
+    ap.add_argument("--slo-tpot", type=float, default=0.1,
+                    help="SLO bound on time-per-output-token (s)")
     ap.add_argument("--scenario", default=None,
                     choices=sorted(FLEET_SCENARIOS),
                     help="named scenario trace for fleet mode (timed "
@@ -223,7 +278,8 @@ def main() -> None:
         preemption_policy=args.preemption_policy,
         prefix_cache=args.prefix_cache)
     if (args.replicas > 1 or args.scenario or args.telemetry_out
-            or args.replica_classes or args.pods > 1):
+            or args.replica_classes or args.pods > 1
+            or args.async_fleet or args.autoscale):
         serve_fleet(args, cfg, params, engine_cfg, mesh)
         return
     eng = ServingEngine(cfg, params, engine_cfg,

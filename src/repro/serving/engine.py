@@ -614,6 +614,36 @@ class ServingEngine:
         self.scheduler.requeue(r)
         self.preemptions += 1
 
+    def drain(self) -> list:
+        """Evict everything this engine holds for fleet-tier re-routing
+        (the async fleet's scale-down path): every paged resident is
+        preempted through the configured preemption path — ``"swap"``
+        stages its KV host-side so the receiving replica restores it
+        bit-for-bit — then the wait queue is handed off in order.
+        Residents leave in admission order so the handoff sequence is
+        deterministic.  The slot backend has no swap machinery, so its
+        drain hands off only queued work and residents finish in place.
+        Returns the evicted requests, oldest first."""
+        handoff = []
+        if self._paged:
+            order = self.table.active_indices()
+            order = order[np.argsort(self.slot_admit_seq[order],
+                                     kind="stable")]
+            for slot in order:
+                handoff.append(self._free(int(slot)))
+        while self.scheduler.wait:
+            handoff.append(self.scheduler.wait.pop(0))
+        return handoff
+
+    def _free(self, slot: int) -> "ServeRequest":
+        """Drain-path eviction of one resident: the preempt path stages
+        its KV (swap mode) and releases the pool blocks, then the victim
+        is popped straight back off the wait queue (``requeue``
+        front-inserts it) so the caller can hand it to another
+        replica."""
+        self._preempt_slot(slot)
+        return self.scheduler.wait.pop(0)
+
     def _fail_slot(self, slot: int, msg: str) -> None:
         """Per-request failure channel: mark the request on ``slot``
         failed (``status``/``error``), release its slot and KV, and keep

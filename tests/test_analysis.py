@@ -211,6 +211,20 @@ def test_deleting_kv_release_fails_gate(tmp_path):
     assert "cache_backend.py" in r.stdout
 
 
+def test_deleting_drain_release_fails_gate(tmp_path):
+    # the drain path's one-resident eviction must pop the requeued
+    # request off the wait queue; turning the pop into a peek is a
+    # leaked release the RA202 pass must flag
+    dst = _mutated_src(
+        tmp_path, "repro/serving/engine.py",
+        "return self.scheduler.wait.pop(0)",
+        "return self.scheduler.wait[0]")
+    r = cli([dst, "--baseline", BASELINE])
+    assert r.returncode == 1
+    assert "RA202" in r.stdout
+    assert "engine.py" in r.stdout
+
+
 def test_vec_only_stat_fails_gate(tmp_path):
     dst = _mutated_src(
         tmp_path, "repro/fleet/server.py",

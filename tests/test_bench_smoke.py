@@ -19,7 +19,7 @@ def test_smoke_schema_and_finite_timings():
     sections = {r["section"] for r in doc2["rows"]}
     assert sections == {"solver", "simulator", "batch", "engine",
                         "engine_paged", "engine_preempt", "fleet",
-                        "fleet_scale"}
+                        "fleet_scale", "fleet_async"}
     kinds = {r.get("kind") for r in doc2["rows"]
              if r["section"] == "engine_paged"}
     assert kinds == {"grid", "stall"}
@@ -32,6 +32,9 @@ def test_smoke_schema_and_finite_timings():
     fscale_kinds = {r.get("kind") for r in doc2["rows"]
                     if r["section"] == "fleet_scale"}
     assert fscale_kinds == {"speedup", "pod"}
+    fasync_kinds = {r.get("kind") for r in doc2["rows"]
+                    if r["section"] == "fleet_async"}
+    assert fasync_kinds == {"compat", "diurnal"}
 
 
 def test_sections_filter():
