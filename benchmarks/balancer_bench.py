@@ -60,7 +60,18 @@ precisely for this):
   tokens-swapped vs tokens-recomputed trade recorded.  The
   ``kind="prefix"`` row: a shared-system-prompt workload with
   ``prefix_cache`` off vs on — block hit-rate, identical generations,
-  and the resident-KV reduction (``kv_bytes_ratio < 1``).
+  and the resident-KV reduction (``kv_bytes_ratio < 1``).  The
+  ``kind="persist"`` row: the same shared-prompt workload *staggered*
+  (each request drains before the next arrives), once per
+  ``prefix_evict`` mode — admission-scoped sharing hits nothing
+  (every shared block dies with its last holder) while the persistent
+  LRU evictor keeps hitting across the gaps, with identical
+  generations and no extra peak resident KV.
+* **fleet** (``kind="affinity"``) — the multi_turn scenario (sessions
+  return for later turns after their first turn drained) under
+  ``bfio`` vs ``bfio_affinity``: prefix-affinity routing sends return
+  visits to the replica still holding their context blocks, and must
+  cut energy-per-token at equal-or-better cross-replica imbalance.
 
 Run:  PYTHONPATH=src python -m benchmarks.balancer_bench [--full] [--smoke]
 Writes BENCH_balancer.json at the repo root (and benchmarks/results/).
@@ -426,6 +437,72 @@ def _engine_prefix_case(G: int, B: int, *, shared_len: int = 32,
     return out
 
 
+def _engine_persist_case(G: int, B: int, *, shared_len: int = 32,
+                         n_rounds: float = 1.5, policy: str = "jsq",
+                         seed: int = 17) -> dict:
+    """Prefix-cache lifetime on a staggered stream: each request drains
+    before the next is submitted, so under admission-scoped sharing
+    every shared block dies with its last holder and the hit rate is
+    exactly zero.  The persistent LRU evictor keeps refcount-0 blocks
+    indexed until the pool actually needs them back, so later requests
+    hit — with generations identical to the uncached run and no extra
+    peak resident KV (cached blocks are reclaimable, not used)."""
+    from repro.core import make_policy
+    from repro.serving import EngineConfig, ServeRequest, ServingEngine
+
+    st = _engine_setup()
+    n = int(G * B * n_rounds)
+
+    def reqs():
+        rng = np.random.default_rng(seed)
+        system = rng.integers(1, 128, size=shared_len)
+        return [ServeRequest(
+            rid=i,
+            tokens=np.concatenate(
+                [system, rng.integers(1, 128,
+                                      size=int(rng.integers(2, 10)))]),
+            max_new_tokens=int(min(3 + rng.geometric(0.2), 20)))
+            for i in range(n)]
+
+    out = {"section": "engine_preempt", "kind": "persist", "G": G,
+           "B": B, "policy": policy, "n_requests": n,
+           "shared_prefix_len": shared_len}
+    gens = {}
+    for mode in ("off", "admission", "lru"):
+        ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                          cache_backend="paged", paged_block_size=16,
+                          prefix_cache=(mode != "off"),
+                          prefix_evict="lru" if mode == "off" else mode)
+
+        def one_run():
+            eng = ServingEngine(st["cfg"], st["params"], ec,
+                                make_policy(policy), mesh=st["mesh"])
+            rs = reqs()
+            s = None
+            for r in rs:    # staggered: drain before the next arrives
+                eng.submit(r)
+                s = eng.run(max_steps=100_000)
+            return eng, s, [r.generated for r in rs]
+
+        one_run()  # warmup
+        t0 = time.time()
+        eng, s, gens[mode] = one_run()
+        wall = time.time() - t0
+        out[f"steps_per_s_{mode}"] = s["steps"] / max(wall, 1e-9)
+        out[f"kv_peak_bytes_{mode}"] = int(eng.kv_peak_bytes)
+        if mode != "off":
+            out[f"prefix_hits_{mode}"] = s["prefix_hits"]
+            out[f"prefix_queries_{mode}"] = s["prefix_queries"]
+            out[f"prefix_hit_rate_{mode}"] = s["prefix_hit_rate"]
+        if mode == "lru":
+            out["prefix_revived"] = s["prefix_revived"]
+    out["kv_bytes_ratio"] = (out["kv_peak_bytes_lru"]
+                             / max(out["kv_peak_bytes_off"], 1))
+    out["gens_equal"] = (gens["off"] == gens["admission"]
+                         == gens["lru"])
+    return out
+
+
 # Fleet cases run the engines' simulated clock in the attention-dominated
 # regime (step wall-time tracks the max resident load instead of being
 # swamped by the constant overhead), so cross-replica imbalance shows up
@@ -489,6 +566,64 @@ def _fleet_case(R: int, G: int, B: int, *, n_requests: int,
                      < row["round_robin_energy_per_token"]))
         rows.append(row)
     return rows
+
+
+def _fleet_affinity_case(R: int, G: int, B: int, *, n_requests: int,
+                         seed: int = 0, scenario_seed: int = 1,
+                         jsonl_dir: str | None = None) -> dict:
+    """Prefix-affinity routing on the multi-turn scenario: a session's
+    later turns arrive after its first turn drained, so only the
+    persistent LRU evictor keeps its context blocks alive — and only
+    affinity-aware routing sends the return visit to the replica that
+    still holds them.  One row, ``bfio`` vs ``bfio_affinity``, on a
+    deterministic trace (same shape for smoke and full)."""
+    from repro.fleet import (
+        FleetServer,
+        FleetTelemetry,
+        SLOSpec,
+        make_scenario,
+    )
+    from repro.serving import EngineConfig
+
+    st = _engine_setup()
+    # a pool with headroom: the evictor can only pay across turn gaps
+    # if cached contexts survive until the session returns
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                      cache_backend="paged", paged_block_size=16,
+                      paged_pool_blocks=48, prefill_chunk=8,
+                      prefix_cache=True)
+    sc = make_scenario("multi_turn", n_requests=n_requests, n_replicas=R,
+                       n_workers=G, slots_per_worker=B, max_seq_len=64,
+                       vocab_size=128, seed=scenario_seed)
+    row = {"section": "fleet", "kind": "affinity",
+           "scenario": "multi_turn", "R": R, "G": G, "B": B,
+           "n_requests": sc.n_requests}
+    for router in ("bfio", "bfio_affinity"):
+        tel = FleetTelemetry(slo=SLOSpec(ttft_s=1.0, tpot_s=0.05))
+        fs = FleetServer(st["cfg"], st["params"], ec, n_replicas=R,
+                         router=router, policy="bfio_h0",
+                         mesh=st["mesh"], telemetry=tel, seed=seed)
+        fs.submit_scenario(sc)
+        t0 = time.time()
+        stats = fs.run(max_steps=200_000)
+        wall = time.time() - t0
+        s = tel.summary()
+        row[f"{router}_imbalance"] = s["mean_cross_imbalance"]
+        row[f"{router}_energy_per_token"] = s["energy_per_token"]
+        row[f"{router}_prefix_hits"] = stats["prefix_hits"]
+        row[f"{router}_prefix_revived"] = stats["prefix_revived"]
+        row[f"{router}_completed"] = s["completed"]
+        row[f"{router}_failed"] = s["failed"]
+        row[f"{router}_steps"] = stats["steps"]
+        row[f"{router}_wall_s"] = wall
+        if jsonl_dir is not None and router == "bfio_affinity":
+            tel.write_jsonl(os.path.join(
+                jsonl_dir, "fleet_telemetry_multi_turn.jsonl"))
+    row["affinity_wins"] = bool(
+        row["bfio_affinity_energy_per_token"]
+        < row["bfio_energy_per_token"]
+        and row["bfio_affinity_imbalance"] <= row["bfio_imbalance"])
+    return row
 
 
 def _fleet_parity_case(G: int, B: int, *, n_rounds: float = 1.5,
@@ -937,12 +1072,17 @@ def run(full: bool = False, smoke: bool = False,
         paged_grid = [(2, 2)]
         preempt_grid = [(2, 2)]
         prefix_grid = [(2, 2)]
+        persist_grid = [(2, 2)]
         stall_shape = (2, 2)
         stall_kw = dict(chunk=16, prompt_len=64, warm_n=2, repeats=1,
                         tiny_model=True)
         fleet_shape = (4, 2, 2)       # R, G, B
         fleet_kw = dict(n_requests=32, routers=("round_robin", "bfio"))
         fleet_parity_shape = (2, 2)
+        # deliberately NOT downsized for smoke: the affinity gate row is
+        # a deterministic trace, cheap enough to run at its real shape
+        fleet_affinity_shape = (3, 1, 2)    # R, G, B
+        fleet_affinity_kw = dict(n_requests=36, seed=0, scenario_seed=1)
         fscale_shape = (8, 1, 2)      # R, G, B
         fscale_kw = dict(n_requests=24, repeats=1,
                          routers=("round_robin", "bfio"))
@@ -963,6 +1103,7 @@ def run(full: bool = False, smoke: bool = False,
         paged_grid = [(G, B) for G in (4, 16, 64) for B in (8, 32)]
         preempt_grid = [(4, 8), (16, 8)]
         prefix_grid = [(4, 8)]
+        persist_grid = [(4, 8)]
         stall_shape = (4, 8)
         stall_kw = dict(chunk=8, prompt_len=192, warm_n=16, repeats=7)
         fleet_shape = (4, 4, 4)
@@ -971,6 +1112,10 @@ def run(full: bool = False, smoke: bool = False,
             routers=("round_robin", "least_loaded", "pod2", "bfio"),
             jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
         fleet_parity_shape = (2, 4)
+        fleet_affinity_shape = (3, 1, 2)
+        fleet_affinity_kw = dict(
+            n_requests=36, seed=0, scenario_seed=1,
+            jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
         fscale_shape = (64, 1, 2)
         fscale_kw = dict(
             n_requests=128, repeats=2,
@@ -1048,6 +1193,15 @@ def run(full: bool = False, smoke: bool = False,
               f"hit_rate={r['prefix_hit_rate']:.2f} "
               f"kv={r['kv_bytes_ratio']:.2f}x of uncached "
               f"gens_equal={r['gens_equal']}", flush=True)
+    for G, B in persist_grid if "engine_preempt" in sections else []:
+        r = _engine_persist_case(G, B)
+        rows.append(r)
+        print(f"  persist G={G:<3d} B={B:<3d} "
+              f"hit_rate adm={r['prefix_hit_rate_admission']:.2f} "
+              f"lru={r['prefix_hit_rate_lru']:.2f} "
+              f"revived={r['prefix_revived']} "
+              f"kv={r['kv_bytes_ratio']:.2f}x of uncached "
+              f"gens_equal={r['gens_equal']}", flush=True)
     if "engine_paged" in sections:
         r = _engine_stall_case(*stall_shape, **stall_kw)
         rows.append(r)
@@ -1073,6 +1227,17 @@ def run(full: bool = False, smoke: bool = False,
               f"{len(r['routers'])} routers: "
               f"stats_equal={r['stats_equal']}  "
               f"(bfio wins {wins}/5 scenarios)", flush=True)
+        r = _fleet_affinity_case(*fleet_affinity_shape,
+                                 **fleet_affinity_kw)
+        rows.append(r)
+        print(f"  fleet  multi_turn R={r['R']} hits "
+              f"{r['bfio_prefix_hits']}->"
+              f"{r['bfio_affinity_prefix_hits']} "
+              f"J/tok {r['bfio_energy_per_token']:.3f}->"
+              f"{r['bfio_affinity_energy_per_token']:.3f} "
+              f"imb {r['bfio_imbalance']:.1f}->"
+              f"{r['bfio_affinity_imbalance']:.1f} "
+              f"win={r['affinity_wins']}", flush=True)
     if "fleet_scale" in sections:
         for r in _fleet_scale_speedup_case(*fscale_shape, **fscale_kw):
             rows.append(r)
@@ -1131,7 +1296,10 @@ def run(full: bool = False, smoke: bool = False,
                     "at R in the hundreds (fleet_scale section) / "
                     "event-driven async fleet with SLO-driven "
                     "autoscaling and bit-exact drain handoff "
-                    "(fleet_async section)",
+                    "(fleet_async section) / persistent LRU prefix "
+                    "evictor + prefix-affinity fleet routing "
+                    "(engine_preempt kind='persist' / fleet "
+                    "kind='affinity' rows)",
         },
         "rows": rows,
     }

@@ -48,6 +48,13 @@ PREEMPT_PREFIX_KEYS = {"G", "B", "policy", "n_requests",
                        "steps_per_s_on", "kv_peak_bytes_off",
                        "kv_peak_bytes_on", "prefix_hits", "prefix_queries",
                        "prefix_hit_rate", "kv_bytes_ratio", "gens_equal"}
+PREEMPT_PERSIST_KEYS = {"G", "B", "policy", "n_requests",
+                        "shared_prefix_len", "prefix_revived",
+                        "kv_bytes_ratio", "gens_equal"} | {
+    f"{k}_{m}" for m in ("off", "admission", "lru")
+    for k in ("steps_per_s", "kv_peak_bytes")} | {
+    f"{k}_{m}" for m in ("admission", "lru")
+    for k in ("prefix_hits", "prefix_queries", "prefix_hit_rate")}
 # fleet rows always carry the round_robin + bfio columns (full runs add
 # least_loaded / pod2); the scenario gate below needs exactly these two
 FLEET_SCENARIO_KEYS = {"scenario", "R", "G", "B", "n_requests",
@@ -58,6 +65,12 @@ FLEET_SCENARIO_KEYS = {"scenario", "R", "G", "B", "n_requests",
               "steps", "wall_s")}
 FLEET_PARITY_KEYS = {"G", "B", "n_requests", "routers", "steps",
                      "stats_equal"}
+FLEET_AFFINITY_KEYS = {"scenario", "R", "G", "B", "n_requests",
+                       "affinity_wins"} | {
+    f"{r}_{m}" for r in ("bfio", "bfio_affinity")
+    for m in ("imbalance", "energy_per_token", "prefix_hits",
+              "prefix_revived", "completed", "failed", "steps",
+              "wall_s")}
 FLEET_SCENARIOS = {"steady", "flash_crowd", "diurnal", "agentic",
                    "long_doc"}
 FLEET_MIN_WINS = 3
@@ -115,7 +128,8 @@ def check(doc: dict) -> None:
     if "engine_preempt" in expected:
         preempt_kinds = {r.get("kind") for r in rows
                          if r.get("section") == "engine_preempt"}
-        assert preempt_kinds == {"pressure", "prefix"}, preempt_kinds
+        assert preempt_kinds == {"pressure", "prefix", "persist"}, \
+            preempt_kinds
         preempt_modes = {r.get("mode") for r in rows
                          if r.get("section") == "engine_preempt"
                          and r.get("kind") == "pressure"}
@@ -123,7 +137,8 @@ def check(doc: dict) -> None:
     if "fleet" in expected:
         fleet_kinds = {r.get("kind") for r in rows
                        if r.get("section") == "fleet"}
-        assert fleet_kinds == {"scenario", "parity"}, fleet_kinds
+        assert fleet_kinds == {"scenario", "parity", "affinity"}, \
+            fleet_kinds
         scen = [r for r in rows if r.get("section") == "fleet"
                 and r.get("kind") == "scenario"]
         assert ({r["scenario"] for r in scen} == FLEET_SCENARIOS), \
@@ -227,8 +242,7 @@ def check(doc: dict) -> None:
                     assert r["tokens_recomputed"] == 0
                 else:
                     assert r["tokens_swapped"] == 0
-            else:
-                assert r.get("kind") == "prefix", r.get("kind")
+            elif r.get("kind") == "prefix":
                 assert PREEMPT_PREFIX_KEYS <= set(r), \
                     PREEMPT_PREFIX_KEYS - set(r)
                 assert _finite_pos(r["steps_per_s_on"])
@@ -240,6 +254,30 @@ def check(doc: dict) -> None:
                 assert r["kv_bytes_ratio"] < 1.0, r["kv_bytes_ratio"]
                 assert r["gens_equal"] is True, \
                     "prefix-cache hits changed generations"
+            else:
+                assert r.get("kind") == "persist", r.get("kind")
+                assert PREEMPT_PERSIST_KEYS <= set(r), \
+                    PREEMPT_PERSIST_KEYS - set(r)
+                for m in ("off", "admission", "lru"):
+                    assert _finite_pos(r[f"steps_per_s_{m}"])
+                for m in ("admission", "lru"):
+                    assert 0.0 <= r[f"prefix_hit_rate_{m}"] <= 1.0
+                # THE lifetime gate: on a staggered stream every shared
+                # block loses its last holder before the next request
+                # arrives, so admission-scoped sharing never hits while
+                # the persistent evictor keeps hitting across the gaps
+                assert r["prefix_hit_rate_admission"] == 0.0, \
+                    r["prefix_hit_rate_admission"]
+                assert r["prefix_hit_rate_lru"] > 0, \
+                    "persistent evictor produced no cross-request hits"
+                assert r["prefix_revived"] > 0, \
+                    "no cached block was ever revived by a later hit"
+                # cached blocks are reclaimable, not resident: keeping
+                # them indexed must not cost peak KV vs the uncached run
+                assert r["kv_bytes_ratio"] <= 1.0 + 1e-9, \
+                    r["kv_bytes_ratio"]
+                assert r["gens_equal"] is True, \
+                    "the persistent evictor changed generations"
         elif sec == "fleet":
             if r.get("kind") == "scenario":
                 assert FLEET_SCENARIO_KEYS <= set(r), \
@@ -253,12 +291,34 @@ def check(doc: dict) -> None:
                     # everything completes
                     assert r[f"{router}_failed"] == 0
                     assert r[f"{router}_completed"] == r["n_requests"]
-            else:
-                assert r.get("kind") == "parity", r.get("kind")
+            elif r.get("kind") == "parity":
                 assert FLEET_PARITY_KEYS <= set(r), \
                     FLEET_PARITY_KEYS - set(r)
                 assert r["stats_equal"] is True, \
                     "fleet(R=1) diverged from the bare ServingEngine"
+            else:
+                assert r.get("kind") == "affinity", r.get("kind")
+                assert FLEET_AFFINITY_KEYS <= set(r), \
+                    FLEET_AFFINITY_KEYS - set(r)
+                for router in ("bfio", "bfio_affinity"):
+                    assert _finite_pos(r[f"{router}_energy_per_token"])
+                    assert r[f"{router}_imbalance"] >= 0
+                    assert r[f"{router}_failed"] == 0
+                    assert r[f"{router}_completed"] == r["n_requests"]
+                # the affinity trace only discriminates if sessions
+                # actually come back to still-cached context blocks
+                assert r["bfio_affinity_prefix_hits"] > 0, \
+                    "multi_turn trace produced no prefix hits"
+                # THE affinity gate (the row is a deterministic trace,
+                # so it holds at every shape, smoke included):
+                # prefix-affinity routing pays in energy-per-token at
+                # equal-or-better cross-replica imbalance
+                assert r["affinity_wins"] is True, \
+                    (f"bfio_affinity J/tok "
+                     f"{r['bfio_affinity_energy_per_token']:.4f} vs "
+                     f"{r['bfio_energy_per_token']:.4f}, imbalance "
+                     f"{r['bfio_affinity_imbalance']:.1f} vs "
+                     f"{r['bfio_imbalance']:.1f}")
         elif sec == "fleet_scale":
             if r.get("kind") == "speedup":
                 assert FSCALE_SPEEDUP_KEYS <= set(r), \

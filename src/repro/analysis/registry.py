@@ -117,7 +117,8 @@ DEFAULT_REGISTRY = Registry(
             attrs=frozenset({
                 "t_now", "steps", "idle_j", "imbalance_sum",
                 "requests_failed", "_busy_mask", "_prev_preemptions",
-                "_prev_prefix_hits", "_queue", "_live", "_seq",
+                "_prev_prefix_hits", "_prev_prefix_revived",
+                "_queue", "_live", "_seq",
             }),
             attr_prefixes=("_snap_",),
             roots=frozenset({"__init__", "step", "run", "submit",
@@ -132,7 +133,8 @@ DEFAULT_REGISTRY = Registry(
             attrs=frozenset({
                 "t_now", "steps", "idle_j", "imbalance_sum",
                 "_queue", "_live", "_prev_preemptions",
-                "_prev_prefix_hits", "barrier_compat", "autoscaler",
+                "_prev_prefix_hits", "_prev_prefix_revived",
+                "barrier_compat", "autoscaler",
                 "max_snapshot_age", "record_routes", "route_log",
             }),
             attr_prefixes=("_ev_", "_rs_", "_as_", "_tick_", "_snap_"),

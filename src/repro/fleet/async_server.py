@@ -397,8 +397,11 @@ class AsyncFleetServer(FleetServer):
             self.imbalance_sum += imb
         d_preempt = int(self._snap_preempt.sum()) - self._prev_preemptions
         d_hits = int(self._snap_hits.sum()) - self._prev_prefix_hits
+        d_revived = (int(self._snap_revived.sum())
+                     - self._prev_prefix_revived)
         self._prev_preemptions += d_preempt
         self._prev_prefix_hits += d_hits
+        self._prev_prefix_revived += d_revived
         if self.telemetry is not None:
             self.telemetry.record_step(
                 step=self.steps, t=self.t_now, dt=dt,
@@ -409,7 +412,9 @@ class AsyncFleetServer(FleetServer):
                 idle_j=self._tick_idle, tokens=self._tick_tokens,
                 preemptions=d_preempt, prefix_hits=d_hits,
                 replica_count=int((self._rs_state == ACTIVE).sum()),
-                replica_busy=self._tick_busy.copy())
+                replica_busy=self._tick_busy.copy(),
+                prefix_revived=d_revived,
+                prefix_cached_blocks=int(self._snap_cached.sum()))
         info = {"t": self.t_now, "dt": dt, "imbalance": imb,
                 "tokens": self._tick_tokens, "idle_j": self._tick_idle,
                 "waiting": (len(self._pending) + len(self._queue)

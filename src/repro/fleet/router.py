@@ -42,6 +42,19 @@ Load-aware routers optionally fold in a predicted output length per
 candidate (``RouterContext.pred_out`` x ``pred_weight``) — the
 predictive-scheduling signal — and see per-replica slot capacity for
 heterogeneous fleets (``RouterContext.capacity``).
+
+``bfio_affinity`` (and ``pod_bfio_*_affinity``) additionally folds
+prefix-cache locality into the same objective: the fleet surfaces
+per-(replica, candidate) predicted hit tokens through
+``RouterContext.affinity`` (the prompt head hashed against each
+replica's live :class:`~repro.serving.paged_cache.PrefixIndex`), and a
+post-solve refinement discounts a candidate's effective size on a
+replica by ``affinity_weight * predicted_hit_tokens`` — cache hits skip
+prefill compute, so the discounted size is the *true* work the
+placement adds there.  Locality and load balance trade inside one
+windowed-imbalance objective instead of a sticky-session override; at
+``affinity_weight=0`` the refinement is skipped entirely and the router
+is bit-identical to plain ``bfio``.
 """
 from __future__ import annotations
 
@@ -97,6 +110,13 @@ class RouterContext:
     # on step completion, so its router sees bounded-stale loads and
     # this field says how stale.  Routers may discount accordingly.
     snapshot_age: Optional[np.ndarray] = None
+    # (R, n) predicted prefix-cache hit tokens: entry [r, i] is how many
+    # leading prompt tokens of candidate i are live (referenced or
+    # LRU-cached) in replica r's PrefixIndex right now.  None when the
+    # fleet has no prefix caches or the router did not ask
+    # (affinity_weight == 0 — the probe is not free, so the server only
+    # computes it for routers that opt in).
+    affinity: Optional[np.ndarray] = None
 
     @property
     def R(self) -> int:
@@ -201,14 +221,29 @@ class BFIORouter(FleetRouter):
     ``pred_weight`` > 0 folds ``pred_weight * ctx.pred_out`` into each
     candidate's size: a request predicted to decode long is placed as if
     it were that much heavier now.  The default 0.0 is an exact no-op.
+
+    ``affinity_weight`` > 0 (``router="bfio_affinity"``) adds the
+    prefix-locality term: after the batched solve, a bounded greedy
+    refinement moves single candidates whenever the move lowers the
+    affinity-discounted windowed-max objective
+    ``J = sum_h max_r traj[r, h]``, where candidate i contributes
+    ``max(size_i - affinity_weight * affinity[r, i], 1) + growth`` on
+    replica r.  ``affinity_weight=1`` is the physical discount — a
+    predicted hit token is a prompt token whose prefill compute the
+    replica skips.  At 0.0 (or ``ctx.affinity is None``) the refinement
+    is skipped entirely: bit-identical to plain ``bfio``.
     """
 
     def __init__(self, H: int = 0, swap_iters: int = 8,
-                 pred_weight: float = 0.0) -> None:
+                 pred_weight: float = 0.0,
+                 affinity_weight: float = 0.0) -> None:
         self.H = int(H)
         self.swap_iters = int(swap_iters)
         self.pred_weight = float(pred_weight)
+        self.affinity_weight = float(affinity_weight)
         self.name = f"bfio_h{H}" if H else "bfio"
+        if self.affinity_weight != 0.0:
+            self.name += "_affinity"
 
     def _growth(self, ctx: RouterContext) -> np.ndarray:
         g = np.zeros(self.H + 1)
@@ -224,6 +259,78 @@ class BFIORouter(FleetRouter):
             sizes = sizes + self.pred_weight * np.asarray(
                 ctx.pred_out, dtype=np.float64)
         return sizes
+
+    def _affinity_refine(self, ctx: RouterContext,
+                         out: np.ndarray) -> np.ndarray:
+        """Greedy single-candidate move descent on the affinity-
+        discounted lexicographic objective (see class docstring):
+        primary ``J1 = sum_h max_r traj[r, h]`` (the solver's windowed
+        peak, with candidate contributions affinity-discounted),
+        secondary ``J2 = sum_i eff[out[i], i]`` (total effective
+        prefill work — the compute that predicted hits save).  A move
+        is taken when it lowers J1, or keeps J1 and lowers J2 — so
+        cache-locality moves off the peak replica are *free* (J1
+        untouched, J2 drops by the discount) while balance stays the
+        binding constraint: the peak never degrades.
+
+        Each pass evaluates every (candidate, target replica) move via
+        a top-2 column-max trick (O(n * R * W) per pass) and applies
+        the lexicographically best strictly-improving one; at most
+        ``2n`` passes.  Exact no-op when ``affinity_weight == 0`` or
+        the fleet supplied no affinity matrix.
+        """
+        lam = self.affinity_weight
+        if lam == 0.0 or ctx.affinity is None:
+            return out
+        n, R = ctx.n_wait, ctx.R
+        if n == 0 or R < 2:
+            return out
+        growth = self._growth(ctx)                         # (W,)
+        aff = np.asarray(ctx.affinity, dtype=np.float64)   # (R, n)
+        # effective contribution of candidate i on replica r: prefill
+        # size with predicted-hit tokens discounted (hits skip chunk
+        # compute), floored at one token so no placement looks free
+        eff = np.maximum(self._sizes(ctx)[None, :] - lam * aff,
+                         1.0)                              # (R, n)
+        traj = (ctx.loads[:, None].astype(np.float64)
+                + ctx.counts[:, None] * growth[None, :])   # (R, W)
+        out = out.copy()
+        for i in range(n):
+            traj[out[i]] += eff[out[i], i] + growth
+        rows = np.arange(R)
+        for _ in range(2 * n):
+            J1 = traj.max(axis=0).sum()
+            J2 = float(sum(eff[out[i], i] for i in range(n)))
+            eps = 1e-9 * (1.0 + abs(J1))   # fp slack, relative scale
+            best = (J1 - eps, J2 - eps, None)
+            for i in range(n):
+                src = int(out[i])
+                t = traj.copy()
+                t[src] -= eff[src, i] + growth             # i removed
+                am = t.argmax(axis=0)                      # (W,)
+                m1 = t[am, np.arange(t.shape[1])]
+                t[am, np.arange(t.shape[1])] = -np.inf
+                m2 = t.max(axis=0)                         # second max
+                t[am, np.arange(t.shape[1])] = m1
+                # per-column max over the *other* rows when row r takes i
+                other = np.where(am[None, :] == rows[:, None],
+                                 m2[None, :], m1[None, :])  # (R, W)
+                add = eff[:, i][:, None] + growth[None, :]  # (R, W)
+                newJ1 = np.maximum(other, t + add).sum(axis=1)
+                newJ1[src] = np.inf
+                newJ2 = J2 - eff[src, i] + eff[:, i]        # (R,)
+                r = int(np.lexsort((newJ2, newJ1))[0])
+                nj1, nj2 = float(newJ1[r]), float(newJ2[r])
+                b1, b2, _ = best
+                if nj1 < b1 - eps or (nj1 <= b1 + eps and nj2 < b2):
+                    best = (nj1, nj2, (i, src, r))
+            if best[2] is None:
+                break
+            i, src, r = best[2]
+            traj[src] -= eff[src, i] + growth
+            traj[r] += eff[r, i] + growth
+            out[i] = r
+        return out
 
     def route(self, ctx: RouterContext) -> np.ndarray:
         import jax.numpy as jnp
@@ -250,7 +357,7 @@ class BFIORouter(FleetRouter):
         if (out < 0).any():   # defensive: caps are ample, so never hit
             fallback = LeastLoadedRouter().route(ctx)
             out = np.where(out < 0, fallback, out)
-        return out
+        return self._affinity_refine(ctx, out)
 
 
 class PodBFIORouter(BFIORouter):
@@ -268,14 +375,17 @@ class PodBFIORouter(BFIORouter):
     """
 
     def __init__(self, pods: int = 4, H: int = 0, swap_iters: int = 8,
-                 pred_weight: float = 0.0) -> None:
+                 pred_weight: float = 0.0,
+                 affinity_weight: float = 0.0) -> None:
         super().__init__(H=H, swap_iters=swap_iters,
-                         pred_weight=pred_weight)
+                         pred_weight=pred_weight,
+                         affinity_weight=affinity_weight)
         self.pods = int(pods)
         if self.pods < 1:
             raise ValueError(f"pods must be >= 1, got {pods}")
         self.name = (f"pod_bfio_p{self.pods}"
-                     + (f"_h{self.H}" if self.H else ""))
+                     + (f"_h{self.H}" if self.H else "")
+                     + ("_affinity" if self.affinity_weight else ""))
 
     def route(self, ctx: RouterContext) -> np.ndarray:
         import jax.numpy as jnp
@@ -339,7 +449,7 @@ class PodBFIORouter(BFIORouter):
             if bad.any():   # defensive: caps are ample, so never hit
                 ap = np.where(bad, int(np.argmin(ctx.loads[m])), ap)
             out[idx] = m[ap]
-        return out
+        return self._affinity_refine(ctx, out)
 
 
 def make_router(name, **kw) -> FleetRouter:
@@ -351,11 +461,14 @@ def make_router(name, **kw) -> FleetRouter:
     if name in ("ll", "least_loaded"):
         return LeastLoadedRouter()
     if name.startswith("pod_bfio"):
-        # pod_bfio[_pP][_hH], e.g. pod_bfio_p16 or pod_bfio_p8_h2
+        # pod_bfio[_pP][_hH][_affinity], e.g. pod_bfio_p16 or
+        # pod_bfio_p8_h2_affinity
         for part in name[len("pod_bfio"):].split("_"):
             if not part:
                 continue
-            if part[0] == "p" and part[1:].isdigit():
+            if part == "affinity":
+                kw.setdefault("affinity_weight", 1.0)
+            elif part[0] == "p" and part[1:].isdigit():
                 kw.setdefault("pods", int(part[1:]))
             elif part[0] == "h" and part[1:].isdigit():
                 kw.setdefault("H", int(part[1:]))
@@ -367,7 +480,12 @@ def make_router(name, **kw) -> FleetRouter:
         d = int(name[3:]) if len(name) > 3 else kw.pop("d", 2)
         return PowerOfDRouter(d=d)
     if name.startswith("bfio"):
+        # bfio[_hH][_affinity]; the affinity token must be parsed
+        # explicitly — startswith("bfio") would otherwise swallow
+        # "bfio_affinity" into a plain BFIORouter silently
+        if "affinity" in name:
+            kw.setdefault("affinity_weight", 1.0)
         if "_h" in name:
-            kw.setdefault("H", int(name.split("_h")[1]))
+            kw.setdefault("H", int(name.split("_h")[1].split("_")[0]))
         return BFIORouter(**kw)
     raise ValueError(f"unknown fleet router {name!r}")

@@ -157,10 +157,13 @@ class FleetServer:
         self._snap_tokens = np.zeros(self.R, dtype=np.int64)
         self._snap_preempt = np.zeros(self.R, dtype=np.int64)
         self._snap_hits = np.zeros(self.R, dtype=np.int64)
+        self._snap_cached = np.zeros(self.R, dtype=np.int64)
+        self._snap_revived = np.zeros(self.R, dtype=np.int64)
         self._busy_mask = np.zeros(self.R, dtype=bool)
         # telemetry per-step deltas: previous cumulative fleet totals
         self._prev_preemptions = 0
         self._prev_prefix_hits = 0
+        self._prev_prefix_revived = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest, arrival_time: float = 0.0) -> None:
@@ -198,6 +201,8 @@ class FleetServer:
             self._snap_tokens[r] = s.tokens_out
             self._snap_preempt[r] = s.preemptions
             self._snap_hits[r] = s.prefix_hits
+            self._snap_cached[r] = s.prefix_cached_blocks
+            self._snap_revived[r] = s.prefix_revived
             self._busy_mask[r] = s.busy
 
     def _pred_out(self) -> Optional[np.ndarray]:
@@ -205,6 +210,44 @@ class FleetServer:
             return None
         return np.array([float(self._predict(req))
                          for _, req in self._queue])
+
+    def _affinity_matrix(self, eligible=None) -> Optional[np.ndarray]:
+        """(R', n) predicted prefix-hit tokens: each candidate's prompt
+        head hashed against each routable replica's live PrefixIndex —
+        entry [j, i] counts the leading tokens of candidate i whose
+        blocks are live (referenced or LRU-cached) on replica ids[j].
+
+        Read-only probe: ``lookup`` + ``is_live`` only — never
+        ``note_lookup`` (routing probes must not skew hit-rate
+        accounting) and never ``touch`` (a probe is not a use; LRU
+        recency belongs to admissions).  Returns None when no replica
+        has an index, so plain load-only routing is unaffected."""
+        ids = (list(range(self.R)) if eligible is None
+               else [int(r) for r in eligible])
+        n = len(self._queue)
+        aff = np.zeros((len(ids), n))
+        keys_by_bs: dict = {}   # block_size -> per-candidate key chains
+        any_index = False
+        for j, r in enumerate(ids):
+            backend = self.engines[r].backend
+            prefix = getattr(backend, "prefix", None)
+            if prefix is None:
+                continue
+            any_index = True
+            alloc = backend.kv.allocator
+            bs = int(backend.block_size)
+            if bs not in keys_by_bs:
+                keys_by_bs[bs] = [prefix.keys_for(req.tokens, bs)
+                                  for _, req in self._queue]
+            for i, keys in enumerate(keys_by_bs[bs]):
+                toks = 0
+                for key, parent, span in keys:
+                    blk = prefix.lookup(key, parent, span)
+                    if blk is None or not alloc.is_live(blk):
+                        break
+                    toks += len(span)
+                aff[j, i] = toks
+        return aff if any_index else None
 
     def _dispatch(self, loads: np.ndarray, counts: np.ndarray,
                   free: np.ndarray, *, eligible=None,
@@ -227,7 +270,12 @@ class FleetServer:
             drift=self.engines[0].drift, rng=self.rng,
             capacity=(self._capacity if eligible is None
                       else self._capacity[eligible]),
-            pred_out=self._pred_out(), snapshot_age=snapshot_age)
+            pred_out=self._pred_out(), snapshot_age=snapshot_age,
+            # the probe walks every replica's index, so only routers
+            # that opt in (affinity_weight != 0) pay for it
+            affinity=(self._affinity_matrix(eligible)
+                      if getattr(self.router, "affinity_weight", 0.0)
+                      else None))
         assign = np.asarray(self.router.route(ctx))
         n_route = self.R if eligible is None else len(eligible)
         if assign.shape != (len(self._queue),) or (assign < 0).any() \
@@ -313,7 +361,8 @@ class FleetServer:
     def _account(self, *, loads: np.ndarray, dts: np.ndarray,
                  de: np.ndarray, any_busy: bool, tokens: int,
                  active: list, waiting: list, preemptions: int,
-                 prefix_hits: int, queued: int) -> dict:
+                 prefix_hits: int, prefix_revived: int,
+                 prefix_cached: int, queued: int) -> dict:
         """Shared barrier accounting: clock/idle/imbalance update,
         request finalization, telemetry row, step info.  Both fleet
         modes call this with identical values, so every derived number
@@ -336,8 +385,10 @@ class FleetServer:
         self._finalize_requests()
         d_preempt = preemptions - self._prev_preemptions
         d_hits = prefix_hits - self._prev_prefix_hits
+        d_revived = prefix_revived - self._prev_prefix_revived
         self._prev_preemptions = preemptions
         self._prev_prefix_hits = prefix_hits
+        self._prev_prefix_revived = prefix_revived
         if self.telemetry is not None:
             self.telemetry.record_step(
                 step=self.steps, t=self.t_now, dt=dt,
@@ -346,7 +397,9 @@ class FleetServer:
                 cross_imbalance=imb, energy_j=float(de.sum()),
                 idle_j=idle, tokens=tokens,
                 preemptions=d_preempt, prefix_hits=d_hits,
-                replica_count=self.R, replica_busy=dts)
+                replica_count=self.R, replica_busy=dts,
+                prefix_revived=d_revived,
+                prefix_cached_blocks=prefix_cached)
         return {"t": self.t_now, "dt": dt, "imbalance": imb,
                 "tokens": tokens, "idle_j": idle,
                 "waiting": len(self._pending) + len(self._queue) + queued,
@@ -380,6 +433,8 @@ class FleetServer:
             waiting=[s.waiting for s in post],
             preemptions=sum(s.preemptions for s in post),
             prefix_hits=sum(s.prefix_hits for s in post),
+            prefix_revived=sum(s.prefix_revived for s in post),
+            prefix_cached=sum(s.prefix_cached_blocks for s in post),
             queued=sum(s.waiting for s in post))
 
     def _step_vec(self) -> dict:
@@ -409,6 +464,8 @@ class FleetServer:
             waiting=self._snap_waiting.tolist(),
             preemptions=int(self._snap_preempt.sum()),
             prefix_hits=int(self._snap_hits.sum()),
+            prefix_revived=int(self._snap_revived.sum()),
+            prefix_cached=int(self._snap_cached.sum()),
             queued=int(self._snap_waiting.sum()))
 
     def step(self) -> dict:
@@ -455,5 +512,8 @@ class FleetServer:
             "failed": self.requests_failed,
             "preemptions": sum(r["preemptions"] for r in rep),
             "prefix_hits": sum(r["prefix_hits"] for r in rep),
+            "prefix_revived": sum(r["prefix_revived"] for r in rep),
+            "prefix_cached_blocks": sum(r["prefix_cached_blocks"]
+                                        for r in rep),
             "replicas": rep,
         }

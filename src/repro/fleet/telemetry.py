@@ -34,6 +34,13 @@ Version history:
   utilization from them.  Version-1 files (no such keys) read back
   unchanged — the derived fields are simply absent, so their stored
   summaries still validate.
+* **3** — step records gain ``prefix_revived`` (per-step delta of
+  cached blocks re-pinned by a later hit — the persistent evictor's
+  signature signal) and ``prefix_cached_blocks`` (fleet-wide gauge of
+  reclaimable LRU-cached blocks when the row was cut);
+  :meth:`summary` totals the former and reports the peak of the
+  latter, guarded exactly like the v2 fields so v1/v2 files read back
+  unchanged.
 """
 from __future__ import annotations
 
@@ -46,8 +53,8 @@ import numpy as np
 __all__ = ["SLOSpec", "FleetTelemetry", "percentiles",
            "SCHEMA_VERSION", "ACCEPTED_VERSIONS"]
 
-SCHEMA_VERSION = 2
-ACCEPTED_VERSIONS = (1, 2)
+SCHEMA_VERSION = 3
+ACCEPTED_VERSIONS = (1, 2, 3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +98,8 @@ class FleetTelemetry:
     STEP_KEYS = ("step", "t", "dt", "replica_loads", "replica_active",
                  "replica_waiting", "cross_imbalance", "energy_j",
                  "idle_j", "tokens", "preemptions", "prefix_hits",
-                 "replica_count", "replica_busy")
+                 "replica_count", "replica_busy",
+                 "prefix_revived", "prefix_cached_blocks")
     REQUEST_KEYS = ("rid", "replica", "status", "error", "t_arrival",
                     "t_routed", "ttft", "tpot", "latency", "n_prompt",
                     "n_generated")
@@ -160,6 +168,13 @@ class FleetTelemetry:
             per = np.asarray(busy, dtype=np.float64).sum(axis=0)
             t = max(self.steps[-1]["t"], 1e-12)
             out["replica_utilization"] = [float(x) for x in per / t]
+        # v3 series (same guard: absent from v1/v2 files)
+        revived = [s.get("prefix_revived") for s in self.steps]
+        if revived and all(x is not None for x in revived):
+            out["prefix_revived"] = sum(revived)
+        cached = [s.get("prefix_cached_blocks") for s in self.steps]
+        if cached and all(x is not None for x in cached):
+            out["prefix_cached_blocks_peak"] = int(max(cached))
         return _jsonify(out)
 
     # -- JSONL export / import -----------------------------------------

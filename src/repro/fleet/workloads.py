@@ -28,6 +28,13 @@ shapes a fleet router must ride:
   hundreds of mostly-idle replicas), where per-step fleet bookkeeping
   — not model compute — dominates wall clock.  The ``fleet_scale``
   bench section times its ref-vs-vec hot path on this shape.
+* ``multi_turn`` — staggered agentic sessions: each session reuses a
+  per-session shared context across several turns, and turn t+1
+  arrives only *after* turn t's estimated finish.  Every turn's
+  context blocks are refcount-0 when the next turn lands, so an
+  admission-scoped prefix cache measures ~0% hits here — the workload
+  the persistent LRU evictor (and ``bfio_affinity`` routing) is
+  CI-gated on.
 
 Every generator is a pure function of its arguments (seed included), so
 scenarios are bit-reproducible across runs and machines — the property
@@ -206,6 +213,54 @@ def _trickle(n, R, G, B, max_seq, vocab, seed, factor, c, tt) -> Scenario:
                         meta={"rate": rate, "spec": spec.name})
 
 
+def _multi_turn(n, R, G, B, max_seq, vocab, seed, factor, c, tt) -> Scenario:
+    """Staggered multi-turn agentic sessions: every turn of a session
+    shares the session's context tokens, and turn t+1 arrives after
+    turn t's *estimated finish* (service-time model plus slack) — so
+    when the next turn lands, the previous turn has drained and its
+    context blocks sit at refcount 0.  An admission-scoped prefix cache
+    gets ~0% hits on this stream; a persistent LRU evictor turns every
+    later turn into a context-length hit, and per-session contexts
+    differ so affinity routing can tell *which* replica holds them."""
+    turns = 3
+    sessions = max(-(-n // turns), 1)
+    rng = np.random.default_rng(seed + 0x717)
+    ctx_len = max(max_seq // 2, 1)
+    sfx_max = max(max_seq - 1 - ctx_len, 2)
+    spec = _spec("fleet-multiturn", mean=max(max_seq / 8, 2), sigma=0.4,
+                 s_min=2, s_max=sfx_max, decode_p=1 / 8, o_max=16)
+    e_o = 1.0 / spec.decode_p
+    dt = c + tt * B * (spec.mu_s + 0.5 * e_o)
+    # session starts: Poisson, rate sized so ~R sessions run at once
+    rate = factor * R * G * B / (e_o * dt) / turns
+    starts = np.cumsum(rng.exponential(1.0 / rate, size=sessions))
+    turn_gap = 2.0 * e_o * dt
+    out: list[FleetRequest] = []
+    rid = 0
+    for s in range(sessions):
+        ctxt = rng.integers(1, vocab, size=ctx_len).astype(np.int32)
+        t_arr = float(starts[s])
+        for _ in range(turns):
+            if rid >= n:
+                break
+            sfx = int(rng.integers(1, sfx_max + 1))
+            dec = int(rng.integers(1, spec.o_max + 1))
+            out.append(FleetRequest(
+                rid=rid, arrival_time=t_arr,
+                tokens=np.concatenate(
+                    [ctxt,
+                     rng.integers(1, vocab, size=sfx).astype(np.int32)]),
+                max_new_tokens=dec))
+            rid += 1
+            # next turn lands after this one's estimated finish
+            t_arr += (ctx_len + sfx + dec) * dt + turn_gap
+    out.sort(key=lambda r: r.arrival_time)    # global arrival order
+    return Scenario(name="multi_turn", requests=out,
+                    meta={"sessions": sessions, "turns": turns,
+                          "shared_ctx_len": ctx_len, "rate": rate,
+                          "turn_gap": turn_gap, "spec": spec.name})
+
+
 SCENARIOS = {
     "steady": _steady,
     "flash_crowd": _flash_crowd,
@@ -213,6 +268,7 @@ SCENARIOS = {
     "agentic": _agentic,
     "long_doc": _long_doc,
     "trickle": _trickle,
+    "multi_turn": _multi_turn,
 }
 
 

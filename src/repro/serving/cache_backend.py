@@ -337,7 +337,8 @@ class PagedCacheBackend(CacheBackend):
             n_layers=cfg.n_layers, n_blocks=n_blocks, block_size=bs,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
             max_requests=self.N, max_blocks_per_req=self.max_blocks,
-            dtype=jnp.dtype(cfg.dtype))
+            dtype=jnp.dtype(cfg.dtype),
+            prefix_evict=getattr(ec, "prefix_evict", "lru"))
         self.prefix: Optional[PrefixIndex] = None
         if getattr(ec, "prefix_cache", False):
             self.prefix = PrefixIndex()
@@ -353,7 +354,18 @@ class PagedCacheBackend(CacheBackend):
 
     @property
     def free_blocks(self) -> int:
-        return self.kv.allocator.n_free
+        """Blocks an allocation can be served from right now: the free
+        list plus the reclaimable LRU-cached list.  Admission block
+        budgets and the decode/chunk preemption gates charge against
+        this — a warm persistent prefix cache is reusable capacity, not
+        pressure, so it must never false-trigger preemption or
+        ``MemoryError``."""
+        return self.kv.allocator.n_reclaimable
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks retained on the prefix-cache LRU list."""
+        return self.kv.allocator.n_cached
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks a request with ``n_tokens`` of KV occupies (>= 1)."""
@@ -373,16 +385,21 @@ class PagedCacheBackend(CacheBackend):
         """Longest leading run of prefix-cache hits for a prompt: returns
         (keys, shared_blocks) where ``keys`` covers every block of the
         prompt (chained content-hash triples) and ``shared_blocks`` is
-        the hit run (possibly empty).  Only content-verified,
-        still-allocated blocks count — the index is evicted eagerly and
-        lookups compare the stored token span, so a hit is always
-        content-valid."""
+        the hit run (possibly empty).  Only content-verified *live*
+        blocks count — referenced by a resident holder or retained on
+        the allocator's LRU cached list.  A cached hit is touched here
+        (LRU recency) and revived when ``admit`` pins it moments later
+        (``add_ref`` on a cached block re-pins it atomically; no
+        allocation happens in between, so the hit cannot be reclaimed
+        out from under the admit)."""
         keys = self.prefix.keys_for(toks_row, self.block_size)
+        alloc = self.kv.allocator
         shared = []
         for key, parent, span in keys:
             blk = self.prefix.lookup(key, parent, span)
-            if blk is None or self.kv.allocator.ref_count(blk) <= 0:
+            if blk is None or not alloc.is_live(blk):
                 break
+            alloc.touch(blk)
             shared.append(blk)
         self.prefix.note_lookup(len(keys), len(shared))
         return keys, shared
@@ -438,7 +455,8 @@ class PagedCacheBackend(CacheBackend):
         self.kv.v_pool = self.kv.v_pool.at[:, blocks].set(
             vb[:, rows, blkpos].astype(dt))
 
-    def seed_chunk_prefix(self, slot: int, toks: np.ndarray) -> int:
+    def seed_chunk_prefix(self, slot: int, toks: np.ndarray,
+                          count: bool = True) -> int:
         """Chunked-admission prefix hit: pin the longest run of *full*
         indexed blocks matching the prompt's leading content into
         ``slot`` (``add_ref``, copy-free) and return the token count they
@@ -450,27 +468,35 @@ class PagedCacheBackend(CacheBackend):
         full blocks strictly before the chunk offset are never written.
         At least the prompt's final token is always left uncovered so the
         finishing chunk computes the logits the first sampled token needs
-        (generations stay bit-identical on dense models)."""
+        (generations stay bit-identical on dense models).
+
+        ``count=False`` skips the hit-rate counters: a preempt-restarted
+        job re-seeds the same admission, and counting that re-walk again
+        would double-count the admission's lookup (the engine passes
+        ``count`` = first-admission)."""
         if self.prefix is None:
             return 0
         L = len(toks)
         keys = self.prefix.keys_for(toks, self.block_size)
+        alloc = self.kv.allocator
         shared: list[int] = []
         for key, parent, span in keys:
             if len(span) < self.block_size:
                 break               # partial tail: never shared pre-write
             blk = self.prefix.lookup(key, parent, span)
-            if blk is None or self.kv.allocator.ref_count(blk) <= 0:
+            if blk is None or not alloc.is_live(blk):
                 break
+            alloc.touch(blk)
             shared.append(blk)
         # keep the last prompt token out of the shared run (see above)
         while shared and len(shared) * self.block_size >= L:
             shared.pop()
-        self.prefix.note_lookup(len(keys), len(shared))
+        if count:
+            self.prefix.note_lookup(len(keys), len(shared))
         if not shared:
             return 0
         for b in shared:
-            self.kv.allocator.add_ref(b)
+            alloc.add_ref(b)
         covered = len(shared) * self.block_size
         self.kv.adopt_blocks(slot, shared, covered)
         return covered
@@ -500,8 +526,12 @@ class PagedCacheBackend(CacheBackend):
         tables = self._tables_for(slots)
         posm = offs[:, None] + np.arange(C)[None, :]
         validm = np.arange(C)[None, :] < clens[:, None]
+        # positions past a full block table have no block to land in
+        # (frozen KV, see ensure_capacity): drop those writes like the
+        # decode path's in_cap clamp instead of corrupting the last block
+        in_cap = posm < self.max_blocks * bs
         bidx = np.clip(posm // bs, 0, self.max_blocks - 1)
-        wblk = np.where(validm,
+        wblk = np.where(validm & in_cap,
                         np.take_along_axis(tables, bidx, axis=1),
                         self.n_blocks).astype(np.int32)
         woff = (posm % bs).astype(np.int32)
@@ -554,7 +584,12 @@ class PagedCacheBackend(CacheBackend):
     def swap_out(self, slot: int) -> PreemptedState:
         """Move a victim's KV blocks to host staging (tiled copy) and
         return them to the pool; the returned state restores the blocks
-        bit-for-bit via :meth:`swap_in`."""
+        bit-for-bit via :meth:`swap_in`.  Staging happens *before* the
+        release, so a prefix-indexed block whose last reference drops
+        here may coherently enter the cached state: its device content
+        is untouched until reclaim (which evicts its index entry first),
+        and the resume path restores from the host copy into fresh
+        blocks — the two can never alias."""
         slot = int(slot)
         blocks = self.kv.req_blocks.get(slot, [])
         state = PreemptedState(

@@ -150,6 +150,12 @@ class EngineConfig:
     # too: leading full-block hits are pinned copy-free and the chunk
     # job starts past them, skipping recompute of the hit prefix.
     prefix_cache: bool = False
+    # eviction lifetime of the prefix index: "lru" (default) retains
+    # refcount-0 indexed blocks on an LRU cached list, reclaimed only
+    # when the free list runs dry — hits survive their last resident
+    # holder (multi-turn sessions); "admission" is the legacy scope:
+    # entries die with the last holder's release.
+    prefix_evict: str = "lru"
 
 
 # ----------------------------------------------------------------------
@@ -199,6 +205,8 @@ class LoadSnapshot:
     tokens_out: int        # cumulative generated tokens
     preemptions: int       # cumulative preemption count
     prefix_hits: int       # cumulative prefix-cache hits
+    prefix_cached_blocks: int = 0   # refcount-0 blocks on the LRU list
+    prefix_revived: int = 0         # cumulative cached-block revivals
 
     @property
     def committed_load(self) -> float:
@@ -246,6 +254,10 @@ class ServingEngine:
             raise ValueError(
                 "prefix_cache=True needs cache_backend='paged' (the "
                 "contiguous slot layout has no shareable blocks)")
+        if ec.prefix_evict not in ("lru", "admission"):
+            raise ValueError(
+                f"prefix_evict must be 'lru' or 'admission', got "
+                f"{ec.prefix_evict!r}")
         self.cfg = cfg
         self.params = params
         self.ec = ec
@@ -355,6 +367,8 @@ class ServingEngine:
         wait = self.wait
         active = int(self.table.active.sum())
         prefix = getattr(self.backend, "prefix", None)
+        alloc = getattr(getattr(self.backend, "kv", None),
+                        "allocator", None)
         return LoadSnapshot(
             resident_load=float(self._loads().sum()),
             wait_cost=float(sum(self._req_cost(r) for r in wait)),
@@ -364,6 +378,8 @@ class ServingEngine:
             tokens_out=self.tokens_out,
             preemptions=self.preemptions,
             prefix_hits=prefix.hits if prefix is not None else 0,
+            prefix_cached_blocks=alloc.n_cached if alloc else 0,
+            prefix_revived=alloc.blocks_revived if alloc else 0,
         )
 
     # ------------------------------------------------------------------
@@ -493,6 +509,10 @@ class ServingEngine:
         slots = self.table.allocate(workers)
         for i, (r, g) in enumerate(items):
             slot = int(slots[i])
+            # first admission of this request?  A preempt-restarted job
+            # re-seeds below, but re-counting its lookup would
+            # double-count the admission in the hit-rate denominators
+            first_admit = int(r.slot) < 0
             r.worker, r.slot = g, slot
             r.status = "active"
             self.slot_req[slot] = r
@@ -509,7 +529,8 @@ class ServingEngine:
                 resume_length = int(r.preempted.length)
                 r.preempted = None
             elif self._paged and self.backend.prefix is not None:
-                done = self.backend.seed_chunk_prefix(slot, toks)
+                done = self.backend.seed_chunk_prefix(slot, toks,
+                                                      count=first_admit)
             self.slot_load[slot] = float(done)
             self.table.prefill_left[slot] = len(toks) - done
             self.scheduler.register_job(slot, r, toks, done=done,
@@ -1016,6 +1037,10 @@ class ServingEngine:
         prefix = getattr(self.backend, "prefix", None)
         hits = prefix.hits if prefix is not None else 0
         queries = prefix.queries if prefix is not None else 0
+        # three-state allocator counters (paged backend; zeros on the
+        # slot layout so slot/paged stats dicts stay key-compatible)
+        alloc = getattr(getattr(self.backend, "kv", None),
+                        "allocator", None)
         return {
             "steps": self.steps,
             "time_s": self.t_now,
@@ -1031,4 +1056,7 @@ class ServingEngine:
             "prefix_hits": hits,
             "prefix_queries": queries,
             "prefix_hit_rate": hits / queries if queries else 0.0,
+            "prefix_cached_blocks": alloc.n_cached if alloc else 0,
+            "prefix_revived": alloc.blocks_revived if alloc else 0,
+            "prefix_reclaimed": alloc.blocks_reclaimed if alloc else 0,
         }

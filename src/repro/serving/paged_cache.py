@@ -11,12 +11,32 @@ Host-side allocator (python, like real engines' schedulers) + device-side
 paged gather/attention (see repro.kernels.paged_attention for the Pallas
 kernel; the jnp path here is the oracle and CPU path).
 
+Block lifecycle (three states, vLLM-evictor style):
+
+* **referenced** — refcount > 0; owned by one or more resident requests.
+* **cached** — refcount 0 but still prefix-indexed: with
+  ``evict="lru"`` (default) a prefix-indexed block whose last reference
+  drops moves onto an LRU *cached* list instead of the free list.  Its
+  KV content stays valid (nobody writes a refcount-0 block), so a later
+  request with the same prompt prefix can *revive* it via ``add_ref``
+  even though every original holder has finished — the lifetime bug the
+  admission-scoped mode (``evict="admission"``) suffers from.
+* **free** — on the free list; content is garbage.
+
+``alloc`` serves from the free list first and reclaims LRU-cached
+blocks only when the free list is empty; *reclaim* (not release) is the
+transition that evicts the block's :class:`PrefixIndex` entry, always
+before the block is handed back out.  Admission and preemption gates
+must therefore budget against free + cached (``n_reclaimable``), not
+``n_free`` alone.
+
 Layout: pool tensors k/v of shape (n_blocks, block_size, Hkv, hd); block
 tables (B, max_blocks) int32 (-1 = unallocated).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -32,46 +52,121 @@ class BlockAllocator:
 
     Blocks are reference-counted: ``alloc`` hands out blocks at refcount 1,
     ``add_ref`` pins a block for sharing (prefix caching), and ``free``
-    decrements — a block returns to the free list only when its last
+    decrements — a block leaves the referenced state only when its last
     reference drops.  Freeing a block that is not allocated (double-free)
     raises instead of silently pushing a duplicate id onto the free list,
     which would later hand the same physical block to two requests and
     corrupt both caches.
+
+    With a :class:`PrefixIndex` attached (``self.prefix``) and
+    ``evict="lru"``, a prefix-indexed block whose last reference drops
+    is *retained* on an LRU cached list (refcount 0, content intact,
+    still indexed) instead of being freed; ``alloc`` reclaims cached
+    blocks oldest-first only once the free list is empty and evicts
+    their index entries at that moment — so an index entry can point at
+    a referenced or a cached block, never at a recycled one.
+    ``add_ref`` on a cached block *revives* it (back to refcount 1).
+    ``evict="admission"`` keeps the legacy lifetime: the cached list
+    stays empty and every last-ref drop is released (and evicted by the
+    owning :class:`PagedKVCache`) immediately.  Without an attached
+    index both modes behave identically, bit-for-bit.
     """
 
-    def __init__(self, n_blocks: int):
+    def __init__(self, n_blocks: int, evict: str = "lru"):
+        if evict not in ("lru", "admission"):
+            raise ValueError(
+                f"evict must be 'lru' or 'admission', got {evict!r}")
         self.n_blocks = n_blocks
+        self.evict = evict
         self._free = list(range(n_blocks - 1, -1, -1))
         self._refs = np.zeros(n_blocks, dtype=np.int32)
+        # LRU cached list: block id -> None, oldest first (insertion
+        # order; touch() re-inserts at the MRU end)
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self.prefix: Optional["PrefixIndex"] = None
+        self.blocks_reclaimed = 0    # cumulative cached -> reallocated
+        self.blocks_revived = 0      # cumulative cached -> re-pinned
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def n_reclaimable(self) -> int:
+        """Blocks ``alloc`` can serve right now: free + cached (cached
+        blocks are reclaimed LRU-first when the free list runs dry).
+        Admission/preemption budgets must gate on this, not ``n_free``,
+        or a warm cache would false-trigger ``MemoryError``."""
+        return len(self._free) + len(self._cached)
+
     def ref_count(self, block: int) -> int:
         return int(self._refs[block])
 
+    def is_live(self, block: int) -> bool:
+        """True when the block's content is valid to share: referenced
+        by a resident request, or retained on the cached list."""
+        return self._refs[block] > 0 or block in self._cached
+
+    def touch(self, block: int) -> None:
+        """Refresh a cached block's LRU recency (a prefix-cache hit)."""
+        if block in self._cached:
+            self._cached.move_to_end(block)
+
     def alloc(self, n: int = 1) -> list[int]:
-        if n > len(self._free):
+        if n > len(self._free) + len(self._cached):
             raise MemoryError(
-                f"KV pool exhausted: want {n}, have {len(self._free)}")
-        out = [self._free.pop() for _ in range(n)]
+                f"KV pool exhausted: want {n}, have {len(self._free)} "
+                f"free + {len(self._cached)} reclaimable-cached")
+        out: list[int] = []
+        reclaimed: list[int] = []
+        for _ in range(n):
+            if self._free:
+                out.append(self._free.pop())
+            else:
+                b, _ = self._cached.popitem(last=False)   # LRU victim
+                reclaimed.append(b)
+                out.append(b)
+        if reclaimed:
+            # reclaim (not release) evicts: the entry dies exactly when
+            # the block's content is about to be overwritten
+            self.blocks_reclaimed += len(reclaimed)
+            if self.prefix is not None:
+                self.prefix.evict(reclaimed)
         self._refs[out] = 1
         return out
 
     def add_ref(self, block: int) -> None:
-        """Pin an allocated block (shared prefix): one more ``free`` is
-        then needed before the block returns to the pool."""
+        """Pin a block for sharing (prefix hit): one more ``free`` is
+        then needed before the block leaves the referenced state.  On a
+        *cached* block this revives it — off the LRU list, refcount 1 —
+        which is how a hit outlives its original holders."""
         if block < 0 or block >= self.n_blocks:
             raise ValueError(f"bad block id {block}")
-        if self._refs[block] <= 0:
-            raise ValueError(f"add_ref on unallocated block {block}")
-        self._refs[block] += 1
+        if self._refs[block] > 0:
+            self._refs[block] += 1
+            return
+        if block in self._cached:
+            del self._cached[block]
+            self._refs[block] = 1
+            self.blocks_revived += 1
+            return
+        raise ValueError(f"add_ref on unallocated block {block}")
 
-    def free(self, blocks: list[int]) -> list[int]:
+    # RA202 sees no release verb here because the free list is a plain
+    # python list (``_free.append``) — the method IS the pool's release
+    # primitive; everything above it (PagedKVCache._free, swap_out,
+    # discard) satisfies the contract by calling it.
+    def free(self, blocks: list[int]) -> list[int]:  # ra: ignore[RA202]
         """Drop one reference per block; returns the blocks whose last
-        reference dropped (i.e. the ones actually returned to the pool —
-        callers holding a prefix index must evict exactly those)."""
+        reference dropped *and* went back to the free list — callers
+        holding a prefix index must evict exactly those.  In ``"lru"``
+        mode a prefix-indexed block is retained on the cached list
+        instead (MRU end) and is absent from the returned list: its
+        index entry stays valid until the block is reclaimed."""
         released = []
         for b in blocks:
             if b < 0 or b >= self.n_blocks:
@@ -83,8 +178,12 @@ class BlockAllocator:
                     f"{int(self._refs[b])}, block is not allocated")
             self._refs[b] -= 1
             if self._refs[b] == 0:
-                self._free.append(b)
-                released.append(b)
+                if (self.evict == "lru" and self.prefix is not None
+                        and self.prefix.contains_block(b)):
+                    self._cached[b] = None
+                else:
+                    self._free.append(b)
+                    released.append(b)
         return released
 
 
@@ -103,9 +202,14 @@ class PrefixIndex:
     divergent token (:meth:`PagedKVCache.append_tokens`).
 
     Entries never pin blocks: the index holds no reference, and
-    :meth:`evict` must be called with every block whose last reference
-    drops (``BlockAllocator.free`` returns exactly that list), so a key
-    can never resolve to a block that was recycled to another request.
+    :meth:`evict` must be called with every block returning to the free
+    list or being reclaimed off the cached list
+    (``BlockAllocator.free`` returns the former; ``alloc`` evicts the
+    latter itself), so a key can never resolve to a block that was
+    recycled to another request.  An entry *may* point at a refcount-0
+    block as long as it sits on the allocator's cached list — that is
+    the persistent-cache state; check ``BlockAllocator.is_live`` before
+    sharing.
     """
 
     def __init__(self):
@@ -162,6 +266,11 @@ class PrefixIndex:
             self._by_key[key] = (block, parent, span)
             self._by_block[block] = key
 
+    def contains_block(self, block: int) -> bool:
+        """True when ``block`` backs an index entry (referenced or
+        cached holder of some prefix span)."""
+        return block in self._by_block
+
     def evict(self, blocks) -> None:
         for b in blocks:
             key = self._by_block.pop(b, None)
@@ -180,15 +289,26 @@ class PagedKVCache:
     block_size: int
     allocator: BlockAllocator
     req_blocks: dict = dataclasses.field(default_factory=dict)
-    # optional prefix cache (see PrefixIndex): when set, every path that
-    # returns blocks to the pool must evict them from the index, and
-    # appends into shared blocks copy-on-write first
-    prefix: Optional[PrefixIndex] = None
+
+    # optional prefix cache (see PrefixIndex): when set, appends into
+    # shared blocks copy-on-write first and last-ref drops either evict
+    # (evict="admission") or retain on the allocator's LRU cached list
+    # (evict="lru").  The index lives on the allocator so the
+    # cached-state machinery (retain / revive / reclaim-evict) and the
+    # index can never disagree about a block's liveness.
+    @property
+    def prefix(self) -> Optional[PrefixIndex]:
+        return self.allocator.prefix
+
+    @prefix.setter
+    def prefix(self, value: Optional[PrefixIndex]) -> None:
+        self.allocator.prefix = value
 
     @classmethod
     def create(cls, *, n_layers: int, n_blocks: int, block_size: int,
                n_kv_heads: int, head_dim: int, max_requests: int,
-               max_blocks_per_req: int, dtype=jnp.bfloat16):
+               max_blocks_per_req: int, dtype=jnp.bfloat16,
+               prefix_evict: str = "lru"):
         z = jnp.zeros((n_layers, n_blocks, block_size, n_kv_heads,
                        head_dim), dtype)
         return cls(
@@ -197,11 +317,15 @@ class PagedKVCache:
                                  dtype=np.int32),
             lengths=np.zeros(max_requests, dtype=np.int32),
             block_size=block_size,
-            allocator=BlockAllocator(n_blocks),
+            allocator=BlockAllocator(n_blocks, evict=prefix_evict),
         )
 
     # -- host-side bookkeeping -------------------------------------------
     def _free(self, blocks: list[int]) -> None:
+        # blocks the allocator actually returned to the free list must
+        # leave the index; indexed last-ref drops in "lru" mode are
+        # retained (cached) by the allocator and stay indexed until
+        # reclaim evicts them
         released = self.allocator.free(blocks)
         if self.prefix is not None and released:
             self.prefix.evict(released)
@@ -318,9 +442,14 @@ class PagedKVCache:
     def ensure_capacity(self, slot: int, new_len: int) -> None:
         """Grow a slot's block list to cover ``new_len`` tokens (chunked
         prefill: blocks are allocated chunk by chunk, not all at
-        admission) and set its length."""
+        admission) and set its length.  ``need`` is clamped to the block
+        table's width: growth past a full table freezes the block list
+        (same freeze-at-capacity semantics as :meth:`append_tokens` —
+        the length keeps counting, overflow writes are dropped) instead
+        of raising a shape-mismatch ``ValueError`` on the table row."""
         blocks = self.req_blocks.setdefault(slot, [])
-        need = -(-max(new_len, 1) // self.block_size)
+        need = min(-(-max(new_len, 1) // self.block_size),
+                   self.block_tables.shape[1])
         if need > len(blocks):
             new = self.allocator.alloc(need - len(blocks))
             self.block_tables[slot, len(blocks):need] = new
@@ -359,7 +488,12 @@ class PagedKVCache:
 
     @property
     def used_blocks(self) -> int:
-        return self.allocator.n_blocks - self.allocator.n_free
+        """Blocks referenced by live requests.  Cached (refcount-0,
+        reclaimable) blocks are excluded: they are opportunistic reuse
+        of memory nobody demands, not resident footprint — a warm
+        persistent cache must not read as KV pressure."""
+        return (self.allocator.n_blocks - self.allocator.n_free
+                - self.allocator.n_cached)
 
     def resident_bytes(self) -> int:
         """Bytes of KV actually occupied by live requests (both pools,
@@ -394,8 +528,15 @@ class PagedKVCache:
 
     def write_token(self, layer: int, slot: int, k: jnp.ndarray,
                     v: jnp.ndarray) -> None:
-        """Write one token's KV (Hkv, hd) at the current length position."""
+        """Write one token's KV (Hkv, hd) at the current length position.
+
+        A frozen slot (length counted past a full block table — see
+        :meth:`append_tokens`) has nowhere for the write to land: it is
+        dropped, matching the batched decode path's ``in_cap`` clamp in
+        ``cache_backend.py`` instead of indexing off the table row."""
         pos = int(self.lengths[slot]) - 1
+        if pos // self.block_size >= self.block_tables.shape[1]:
+            return                   # frozen KV: overflow write dropped
         blk = self.block_tables[slot, pos // self.block_size]
         off = pos % self.block_size
         self.k_pool = self.k_pool.at[layer, blk, off].set(

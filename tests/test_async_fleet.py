@@ -377,7 +377,7 @@ class TestTelemetryV2:
                     replica_busy=list(busy))
 
     def test_v2_summary_and_roundtrip(self, tmp_path):
-        assert SCHEMA_VERSION == 2
+        assert SCHEMA_VERSION == 3
         tel = FleetTelemetry()
         for i in range(3):
             tel.record_step(**self._step(i, count=2 - (i == 2)))
@@ -386,7 +386,26 @@ class TestTelemetryV2:
                                          "min": 1, "max": 2}
         assert summ["replica_utilization"] == \
             [pytest.approx(1.0), pytest.approx(2.0)]
+        # v2-shaped steps carry no v3 keys: the v3 derivations are
+        # simply absent, exactly like v2's on a v1 file
+        assert "prefix_revived" not in summ
+        assert "prefix_cached_blocks_peak" not in summ
         path = tmp_path / "v2.jsonl"
+        tel.write_jsonl(str(path))
+        back = FleetTelemetry.read_jsonl(str(path))
+        assert back.summary() == summ
+
+    def test_v3_summary_and_roundtrip(self, tmp_path):
+        tel = FleetTelemetry()
+        for i, (rev, cached) in enumerate([(0, 2), (3, 5), (1, 4)]):
+            tel.record_step(**self._step(i), prefix_revived=rev,
+                            prefix_cached_blocks=cached)
+        summ = tel.summary()
+        # revived rows are per-step deltas (summed); the cached-block
+        # count is a gauge (peak reported)
+        assert summ["prefix_revived"] == 4
+        assert summ["prefix_cached_blocks_peak"] == 5
+        path = tmp_path / "v3.jsonl"
         tel.write_jsonl(str(path))
         back = FleetTelemetry.read_jsonl(str(path))
         assert back.summary() == summ
@@ -409,10 +428,10 @@ class TestTelemetryV2:
         assert "replica_utilization" not in summ
 
     def test_unknown_version_rejected(self, tmp_path):
-        path = tmp_path / "v3.jsonl"
+        path = tmp_path / "v4.jsonl"
         with open(path, "w") as f:
             f.write(json.dumps(
-                {"kind": "meta", "schema_version": 3,
+                {"kind": "meta", "schema_version": 4,
                  "slo": {"ttft_s": 1.0, "tpot_s": 0.1},
                  "record_steps": True}) + "\n")
         with pytest.raises(ValueError, match="schema_version"):

@@ -25,10 +25,10 @@ def test_smoke_schema_and_finite_timings():
     assert kinds == {"grid", "stall"}
     preempt_kinds = {r.get("kind") for r in doc2["rows"]
                      if r["section"] == "engine_preempt"}
-    assert preempt_kinds == {"pressure", "prefix"}
+    assert preempt_kinds == {"pressure", "prefix", "persist"}
     fleet_kinds = {r.get("kind") for r in doc2["rows"]
                    if r["section"] == "fleet"}
-    assert fleet_kinds == {"scenario", "parity"}
+    assert fleet_kinds == {"scenario", "parity", "affinity"}
     fscale_kinds = {r.get("kind") for r in doc2["rows"]
                     if r["section"] == "fleet_scale"}
     assert fscale_kinds == {"speedup", "pod"}

@@ -113,6 +113,107 @@ class TestAllocatorFuzz:
         assert a.n_free == a.n_blocks
         assert (a._refs == 0).all()
 
+    @fuzz_seeds(8)
+    def test_three_state_partition_with_prefix_retention(self, seed):
+        """Random alloc/register/pin/free sequences with a prefix index
+        attached, against a shadow model of the persistent-evictor
+        lifecycle: every block is exactly one of {free,
+        cached-and-indexed, referenced}, reclaim evicts the index entry
+        before the block is handed back out, and reviving a cached
+        block never aliases a concurrently reclaimed one."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(4, 24))
+        a = BlockAllocator(n)
+        idx = PrefixIndex()
+        a.prefix = idx
+        refs: dict[int, int] = {}       # referenced shadow
+        cached: set[int] = set()        # cached shadow
+        registered: set[int] = set()    # indexed shadow
+        key_n = 0
+        for _ in range(300):
+            op = rng.integers(0, 4)
+            if op == 0:               # alloc (reclaims LRU when dry)
+                k = int(rng.integers(1, 4))
+                if k > a.n_free + a.n_cached:
+                    with pytest.raises(MemoryError):
+                        a.alloc(k)
+                else:
+                    reclaim = max(k - a.n_free, 0)
+                    r0 = a.blocks_reclaimed
+                    for b in a.alloc(k):
+                        # a handed-out block can never be one some
+                        # concurrent revive holds a reference to
+                        assert b not in refs
+                        if b in cached:          # reclaimed
+                            cached.discard(b)
+                            registered.discard(b)
+                        # reclaim evicted the entry before reuse
+                        assert not idx.contains_block(b)
+                        refs[b] = 1
+                    assert a.blocks_reclaimed - r0 == reclaim
+            elif op == 1 and refs:    # index a referenced block
+                b = int(rng.choice(list(refs)))
+                if b not in registered:
+                    span = (key_n,)   # unique content per entry
+                    idx.register(idx.chain(None, span), None, span, b)
+                    key_n += 1
+                    registered.add(b)
+            elif op == 2 and (refs or cached):
+                # add_ref: pin a referenced block / revive a cached one
+                b = int(rng.choice(list(refs) + sorted(cached)))
+                v0 = a.blocks_revived
+                a.add_ref(b)
+                if b in cached:
+                    cached.discard(b)
+                    refs[b] = 1
+                    assert a.blocks_revived == v0 + 1
+                else:
+                    refs[b] += 1
+            elif op == 3 and refs:    # free (indexed last-ref -> cached)
+                b = int(rng.choice(list(refs)))
+                a.free([b])
+                refs[b] -= 1
+                if refs[b] == 0:
+                    del refs[b]
+                    if b in registered:
+                        cached.add(b)
+            # exact three-state partition after every op
+            assert a.n_free == a.n_blocks - len(refs) - len(cached)
+            assert a.n_cached == len(cached)
+            assert len(idx) == len(registered)
+            for b in cached:
+                assert a.ref_count(b) == 0 and a.is_live(b)
+                assert idx.contains_block(b)
+            for b, c in refs.items():
+                assert a.ref_count(b) == c
+        # drain: every reference released; indexed blocks persist cached
+        for b, c in list(refs.items()):
+            a.free([b] * c)
+        assert (a._refs == 0).all()
+        assert a.n_free + a.n_cached == a.n_blocks
+        assert a.n_cached == len(registered)
+        assert len(idx) == a.n_cached
+
+    def test_reclaim_is_lru_ordered_and_touch_refreshes(self):
+        """Cached blocks are reclaimed oldest-first; touch() moves a
+        block to the MRU end so a recent hit is reclaimed last."""
+        a = BlockAllocator(3)
+        idx = PrefixIndex()
+        a.prefix = idx
+        blocks = a.alloc(3)
+        for i, b in enumerate(blocks):
+            idx.register(idx.chain(None, (i,)), None, (i,), b)
+        for b in blocks:
+            a.free([b])               # cache order = free order
+        assert a.n_cached == 3
+        a.touch(blocks[0])            # hit: oldest becomes MRU
+        got = a.alloc(2)              # reclaims the two LRU blocks
+        assert got == [blocks[1], blocks[2]]
+        assert not idx.contains_block(blocks[1])
+        assert not idx.contains_block(blocks[2])
+        assert idx.contains_block(blocks[0])
+        assert a.is_live(blocks[0])
+
     @fuzz_seeds(4)
     def test_double_free_never_corrupts_free_list(self, seed):
         rng = np.random.default_rng(seed)
@@ -194,7 +295,37 @@ class TestCopyOnWrite:
         assert cache.req_blocks[0][0] == blk
         cache.release(0)
         cache.release(1)
+        # persistent evictor (default): the indexed block survives its
+        # last holder on the cached list; the COW copy (never indexed)
+        # goes straight back to the free list
+        assert cache.allocator.n_free == 15
+        assert cache.allocator.n_cached == 1
+        assert cache.allocator.is_live(blk)
+        assert cache.allocator.ref_count(blk) == 0
+        assert len(cache.prefix) == 1
+        # reviving the cached block re-pins it for a new sharer
+        cache.admit(2, 5, shared=(blk,))
+        assert cache.allocator.ref_count(blk) == 1
+        assert cache.allocator.n_cached == 0
+        assert cache.allocator.blocks_revived == 1
+        cache.release(2)
+
+    def test_admission_scoped_evicts_with_last_holder(self):
+        """evict='admission' pins the legacy lifetime: entry dies with
+        the last resident holder's release."""
+        cache = PagedKVCache.create(
+            n_layers=1, n_blocks=16, block_size=8, n_kv_heads=1,
+            head_dim=4, max_requests=4, max_blocks_per_req=4,
+            prefix_evict="admission")
+        cache.prefix = PrefixIndex()
+        cache.admit(0, 5)
+        (blk,) = cache.req_blocks[0]
+        ((key, parent, span),) = cache.prefix.keys_for(
+            [1, 2, 3, 4, 5], block_size=8)
+        cache.prefix.register(key, parent, span, blk)
+        cache.release(0)
         assert cache.allocator.n_free == 16
+        assert cache.allocator.n_cached == 0
         assert len(cache.prefix) == 0           # eviction followed frees
 
     def test_append_demand_counts_cow_and_crossings(self):
@@ -254,12 +385,23 @@ def _run(params, mesh, reqs, *, G, B, policy="jsq", max_seq_len=64,
 
 
 def _assert_drained(eng):
-    """(c) every block back in the pool, refcounts at zero, index empty."""
+    """(c) three-state partition at drain: refcounts all zero, every
+    block either free or cached-and-indexed, and the prefix index holds
+    exactly the cached blocks (persistence: entries survive the drain,
+    pinned one-to-one to LRU-cached blocks, never to recycled ones)."""
     alloc = eng.backend.kv.allocator
-    assert alloc.n_free == alloc.n_blocks
     assert (alloc._refs == 0).all()
-    if eng.backend.prefix is not None:
-        assert len(eng.backend.prefix) == 0
+    assert alloc.n_free + alloc.n_cached == alloc.n_blocks
+    prefix = eng.backend.prefix
+    if prefix is not None:
+        assert len(prefix) == alloc.n_cached
+        for b in alloc._cached:
+            assert prefix.contains_block(b)
+        rate = eng.stats()["prefix_hit_rate"]
+        assert 0.0 <= rate <= 1.0
+    else:
+        assert alloc.n_cached == 0
+        assert alloc.n_free == alloc.n_blocks
 
 
 def _pool_for(eng, reqs, frac):
@@ -483,6 +625,71 @@ class TestChunkedPrefix:
         for a, c in zip(oracle, on):
             assert a.generated == c.generated
         _assert_drained(eng)
+
+    def test_preempt_restart_counts_admission_once(self, setup):
+        """A recompute-preempted chunked job re-seeds its prefix on
+        re-admission; the hit-rate counters must count the admission's
+        lookup exactly once, not once per restart."""
+        params, mesh = setup
+        reqs = self._shared_reqs(n=2)
+        eng = ServingEngine(
+            CFG, params,
+            EngineConfig(n_workers=1, slots_per_worker=2, max_seq_len=64,
+                         cache_backend="paged", prefill_chunk=8,
+                         prefix_cache=True, preemption_mode="recompute"),
+            make_policy("fcfs"), mesh=mesh)
+        eng.submit(reqs[0])
+        eng.step()
+        while eng.scheduler.n_prefilling:
+            eng.step()
+        eng.submit(reqs[1])
+        eng.step()                       # admit: seeds + counts once
+        q1, h1 = eng.backend.prefix.queries, eng.backend.prefix.hits
+        assert q1 > 0 and h1 > 0
+        slot = reqs[1].slot
+        assert eng.scheduler.job(slot) is not None
+        eng._preempt_slot(slot)          # restart -> re-seed (uncounted)
+        eng.run()
+        assert all(r.done and not r.failed for r in reqs)
+        assert eng.backend.prefix.queries == q1
+        assert eng.backend.prefix.hits == h1
+        rate = eng.stats()["prefix_hit_rate"]
+        assert 0.0 <= rate <= 1.0
+
+    def test_hits_survive_last_holder(self, setup):
+        """The lifetime bug: with every holder of a shared prefix
+        finished, a later identical-prefix arrival must still hit
+        (persistent LRU evictor) — admission-scoped measures zero."""
+        params, mesh = setup
+        proto = self._shared_reqs(n=4, seed=11)
+        for r in proto:
+            r.max_new_tokens = 4         # no long-running holder
+        oracle = _clone(proto)
+        _run(params, mesh, oracle, G=1, B=2, cache_backend="slot")
+        stats, engines = {}, {}
+        for mode in ("admission", "lru"):
+            reqs = _clone(proto)
+            eng = ServingEngine(
+                CFG, params,
+                EngineConfig(n_workers=1, slots_per_worker=2,
+                             max_seq_len=64, cache_backend="paged",
+                             prefill_chunk=8, prefix_cache=True,
+                             prefix_evict=mode),
+                make_policy("fcfs"), mesh=mesh)
+            # staggered turns: each submitted after the previous drained
+            for r in reqs:
+                eng.submit(r)
+                while eng.wait or eng.table.active.any():
+                    eng.step()
+            stats[mode], engines[mode] = eng.stats(), eng
+            for a, b in zip(oracle, reqs):
+                assert a.generated == b.generated
+        assert stats["admission"]["prefix_hits"] == 0
+        assert stats["lru"]["prefix_hits"] > 0
+        assert stats["lru"]["prefix_revived"] > 0
+        assert stats["lru"]["prefix_hit_rate"] > \
+            stats["admission"]["prefix_hit_rate"]
+        _assert_drained(engines["lru"])
 
 
 class TestPressureDeterministic:

@@ -18,6 +18,7 @@ from repro.serving import (
     EngineConfig,
     FIFOPreemption,
     LIFOPreemption,
+    PagedKVCache,
     PreemptContext,
     Scheduler,
     ServeRequest,
@@ -183,6 +184,43 @@ class TestBlockGate:
             s.submit(_Req(i, 8))
         out = s.admit(_ctx(3), caps=np.array([4]))
         assert len(out) == 3 and not s.wait
+
+
+class TestChunkPastCapacity:
+    """Chunked prefill growing past the block table must freeze (the
+    documented append_tokens overflow semantics), not raise."""
+
+    def _cache(self):
+        return PagedKVCache.create(
+            n_layers=1, n_blocks=8, block_size=16, n_kv_heads=2,
+            head_dim=4, max_requests=2, max_blocks_per_req=2)
+
+    def test_ensure_capacity_clamps_to_table_width(self):
+        kv = self._cache()
+        kv.admit(0, 16)
+        # grow chunk by chunk to 3 blocks' worth of tokens — one past
+        # the 2-wide table; pre-clamp this raised a numpy broadcast
+        # ValueError on the table-row assignment
+        for new_len in (32, 48):
+            kv.ensure_capacity(0, new_len)
+        assert len(kv.req_blocks[0]) == 2      # table full, list frozen
+        assert (kv.block_tables[0] >= 0).all()
+        assert int(kv.lengths[0]) == 48        # length keeps counting
+        kv.ensure_capacity(0, 49)              # idempotent once frozen
+        assert len(kv.req_blocks[0]) == 2
+
+    def test_write_token_drops_overflow_on_frozen_slot(self):
+        kv = self._cache()
+        kv.admit(0, 16)
+        kv.ensure_capacity(0, 48)              # frozen past the table
+        k = jax.numpy.ones((2, 4))
+        before = kv.k_pool
+        kv.write_token(0, 0, k, k)             # pos 47 -> block 2: off-table
+        assert kv.k_pool is before             # dropped, no pool write
+        kv.set_length(0, 32)
+        kv.write_token(0, 0, k, k)             # pos 31: last in-cap slot
+        blk = int(kv.block_tables[0, 1])
+        assert float(kv.k_pool[0, blk, 15].sum()) != 0.0
 
 
 CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
