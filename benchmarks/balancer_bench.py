@@ -943,6 +943,138 @@ def _fleet_async_diurnal_case(R: int, G: int, B: int, *, n_requests: int,
     }
 
 
+def _obs_case(R: int, G: int, B: int, *, n_requests: int,
+              load_factor: float = 0.4, seed: int = 5,
+              variants=("barrier", "async"),
+              jsonl_dir: str | None = None) -> list[dict]:
+    """Observability exactness + overhead: the same diurnal stream with
+    the span recorder enabled vs disabled, per fleet tier.  Gates (all
+    enforced by ``check_bench``):
+
+    * the straggler ledger's attributed total equals ``stats['idle_j']``
+      bit-exactly, and every telemetry row's ``idle_split`` left-folds
+      to its ``idle_j`` bit-exactly;
+    * the exported trace round-trips through the validating reader and
+      every fleet-track request span's ``e2e_s`` equals the telemetry's
+      per-request ``latency`` bit-exactly;
+    * the disabled recorder buffers zero events and reproduces
+      bit-identical stats and telemetry (observation is free when off);
+    * the enabled recorder's wall-clock overhead is bounded (full runs
+      only — smoke shapes are dispatch-jitter-dominated)."""
+    import gc
+
+    from repro.fleet import (
+        AsyncFleetServer,
+        FleetServer,
+        FleetTelemetry,
+        SLOSpec,
+        TargetUtilizationAutoscaler,
+        make_scenario,
+    )
+    from repro.obs import SpanRecorder, fold_sum, read_trace, write_trace
+    from repro.serving import EngineConfig
+
+    st = _fleet_scale_setup()
+    ec = EngineConfig(n_workers=G, slots_per_worker=B, max_seq_len=64,
+                      cache_backend="paged", paged_block_size=16,
+                      preemption_mode="swap", **FLEET_TIMING)
+    sc = make_scenario("diurnal", n_requests=n_requests, n_replicas=R,
+                       n_workers=G, slots_per_worker=B, max_seq_len=64,
+                       vocab_size=128, seed=seed,
+                       load_factor=load_factor, **FLEET_TIMING)
+    slo = SLOSpec(ttft_s=0.5, tpot_s=0.1)
+
+    def build(variant, telemetry, recorder):
+        if variant == "async":
+            auto = TargetUtilizationAutoscaler(
+                r_min=1, r_max=R, target=0.7, interval_s=0.05,
+                warmup_s=0.02)
+            fs = AsyncFleetServer(
+                st["cfg"], st["params"], ec, n_replicas=R,
+                router="bfio", policy="bfio_h0", mesh=st["mesh"],
+                telemetry=telemetry, autoscaler=auto,
+                max_snapshot_age=0.05, obs=recorder)
+        else:
+            fs = FleetServer(
+                st["cfg"], st["params"], ec, n_replicas=R,
+                router="bfio", policy="bfio_h0", mesh=st["mesh"],
+                telemetry=telemetry, obs=recorder)
+        fs.submit_scenario(sc)
+        return fs
+
+    def timed(variant, telemetry, recorder):
+        fs = build(variant, telemetry, recorder)
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            stats = fs.run(max_steps=500_000)
+            wall = time.perf_counter() - t0
+        finally:
+            gc.enable()
+        return fs, stats, wall
+
+    rows = []
+    out_dir = jsonl_dir or tempfile.mkdtemp(prefix="bench_obs_")
+    for variant in variants:
+        build(variant, None, None).run(max_steps=500_000)   # warmup
+        rec = SpanRecorder()
+        tel_on = FleetTelemetry(slo=slo)
+        fs_on, stats_on, wall_on = timed(variant, tel_on, rec)
+        tel_off = FleetTelemetry(slo=slo)
+        fs_off, stats_off, wall_off = timed(variant, tel_off, None)
+
+        ledger = fs_on.straggler_ledger()
+        split_sums_match = all(
+            fold_sum(s["idle_split"]) == s["idle_j"]
+            for s in tel_on.steps)
+        # trace export -> validating reader -> span/latency equality
+        trace_path = os.path.join(
+            out_dir, f"obs_diurnal_{variant}_R{R}.trace")
+        write_trace(rec, trace_path)
+        seen = read_trace(trace_path)
+        lat = {q["rid"]: q["latency"] for q in tel_on.requests}
+        spans_match_latency = (
+            set(seen["requests"]) == set(lat)
+            and all(v["e2e_s"] == lat[rid]
+                    for rid, v in seen["requests"].items()))
+        tel_path = os.path.join(
+            out_dir, f"obs_diurnal_{variant}_R{R}.jsonl")
+        tel_on.write_jsonl(tel_path)
+        # read_jsonl re-validates the stored summary on the way back in
+        back = FleetTelemetry.read_jsonl(tel_path)
+        telemetry_roundtrip = (
+            back.steps == tel_on.steps
+            and json.loads(json.dumps(tel_on.summary()))
+            == back.summary())
+        rows.append({
+            "section": "obs", "kind": "obs", "variant": variant,
+            "scenario": sc.name, "R": R, "G": G, "B": B,
+            "n_requests": sc.n_requests, "load_factor": load_factor,
+            "wall_s_enabled": wall_on, "wall_s_disabled": wall_off,
+            "overhead_ratio": wall_on / max(wall_off, 1e-12),
+            "idle_j": stats_on["idle_j"],
+            "ledger_total_j": ledger["total_idle_j"],
+            "ledger_matches":
+                ledger["total_idle_j"] == stats_on["idle_j"],
+            "split_sums_match": split_sums_match,
+            "by_cause": ledger["by_cause"],
+            "gating_steps": ledger["gating_steps"],
+            "trough_steps": ledger["trough_steps"],
+            "trace_events": rec.n_events,
+            "trace_spans": len(seen["requests"]),
+            "trace_events_disabled": fs_off._obs_rec.n_events,
+            "trace_roundtrip": seen["n_points"] == rec.n_events,
+            "spans_match_latency": spans_match_latency,
+            "stats_bit_identical": stats_on == stats_off,
+            "telemetry_bit_identical":
+                tel_on.steps == tel_off.steps
+                and tel_on.requests == tel_off.requests,
+            "telemetry_roundtrip": telemetry_roundtrip,
+        })
+    return rows
+
+
 _STALL_STATE: dict = {}
 
 
@@ -1052,7 +1184,8 @@ def _engine_stall_case(G: int, B: int, *, chunk: int = 8,
 
 
 ALL_SECTIONS = ("solver", "simulator", "batch", "engine", "engine_paged",
-                "engine_preempt", "fleet", "fleet_scale", "fleet_async")
+                "engine_preempt", "fleet", "fleet_scale", "fleet_async",
+                "obs")
 
 
 def run(full: bool = False, smoke: bool = False,
@@ -1093,6 +1226,8 @@ def run(full: bool = False, smoke: bool = False,
                                 routers=("round_robin", "bfio"))
         fasync_diurnal_shape = (4, 2, 4)    # R, G, B
         fasync_diurnal_kw = dict(n_requests=24, load_factor=0.4)
+        obs_shape = (4, 2, 4)               # R, G, B
+        obs_kw = dict(n_requests=24, load_factor=0.4)
         n_rounds, iters = 2.0, 2
     else:
         solver_grid = [(G, N) for G in (64, 256, 1024)
@@ -1130,6 +1265,10 @@ def run(full: bool = False, smoke: bool = False,
             routers=("round_robin", "least_loaded", "pod2", "bfio"))
         fasync_diurnal_shape = (8, 2, 4)
         fasync_diurnal_kw = dict(
+            n_requests=96, load_factor=0.35,
+            jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
+        obs_shape = (8, 2, 4)
+        obs_kw = dict(
             n_requests=96, load_factor=0.35,
             jsonl_dir=os.path.join(ROOT, "benchmarks", "results"))
         n_rounds, iters = 4.0, 10
@@ -1273,6 +1412,17 @@ def run(full: bool = False, smoke: bool = False,
               f"{r['async_slo_attainment']:.2f} "
               f"handoffs={r['drain_handoffs']} lost={r['tokens_lost']} "
               f"gens_equal={r['gens_equal']}", flush=True)
+    if "obs" in sections:
+        for r in _obs_case(*obs_shape, **obs_kw):
+            rows.append(r)
+            exact = (r["ledger_matches"] and r["split_sums_match"]
+                     and r["spans_match_latency"])
+            print(f"  obs    {r['variant']:<8s} R={r['R']} "
+                  f"idle={r['idle_j']:8.2f}J exact={exact} "
+                  f"events={r['trace_events']:<5d} "
+                  f"(off: {r['trace_events_disabled']}) "
+                  f"free_when_off={r['stats_bit_identical']} "
+                  f"overhead={r['overhead_ratio']:.2f}x", flush=True)
 
     doc = {
         "meta": {
@@ -1299,7 +1449,10 @@ def run(full: bool = False, smoke: bool = False,
                     "(fleet_async section) / persistent LRU prefix "
                     "evictor + prefix-affinity fleet routing "
                     "(engine_preempt kind='persist' / fleet "
-                    "kind='affinity' rows)",
+                    "kind='affinity' rows) / per-request tracing + "
+                    "barrier straggler attribution with bit-exact "
+                    "idle-energy decomposition and a free-when-off "
+                    "recorder (obs section)",
         },
         "rows": rows,
     }

@@ -102,6 +102,19 @@ FASYNC_DIURNAL_KEYS = {"scenario", "R", "G", "B", "router", "n_requests",
     f"{side}_{m}" for side in ("barrier", "async")
     for m in ("idle_j", "energy_per_token", "slo_attainment",
               "completed", "failed", "tokens", "steps")}
+OBS_KEYS = {"scenario", "variant", "R", "G", "B", "n_requests",
+            "load_factor", "wall_s_enabled", "wall_s_disabled",
+            "overhead_ratio", "idle_j", "ledger_total_j",
+            "ledger_matches", "split_sums_match", "by_cause",
+            "gating_steps", "trough_steps", "trace_events",
+            "trace_spans", "trace_events_disabled", "trace_roundtrip",
+            "spans_match_latency", "stats_bit_identical",
+            "telemetry_bit_identical", "telemetry_roundtrip"}
+OBS_VARIANTS = {"barrier", "async"}
+# enabled-recorder wall-clock bound, full grid only (smoke shapes are
+# dispatch-jitter-dominated); generous because the gate is "observation
+# is cheap", not a perf race — the exactness gates are the hard ones
+OBS_MAX_OVERHEAD = 10.0
 
 
 def _finite_pos(x) -> bool:
@@ -171,6 +184,10 @@ def check(doc: dict) -> None:
         fa_kinds = {r.get("kind") for r in rows
                     if r.get("section") == "fleet_async"}
         assert fa_kinds == {"compat", "diurnal"}, fa_kinds
+    if "obs" in expected:
+        obs_variants = {r.get("variant") for r in rows
+                        if r.get("section") == "obs"}
+        assert obs_variants == OBS_VARIANTS, obs_variants
     for r in rows:
         sec = r["section"]
         if sec == "solver":
@@ -395,6 +412,36 @@ def check(doc: dict) -> None:
                             >= r["barrier_slo_attainment"]), \
                         (r["async_slo_attainment"],
                          r["barrier_slo_attainment"])
+        elif sec == "obs":
+            assert OBS_KEYS <= set(r), OBS_KEYS - set(r)
+            assert _finite_pos(r["wall_s_enabled"])
+            assert _finite_pos(r["wall_s_disabled"])
+            # the exactness contracts hold at every shape, smoke
+            # included — they are bit-equality checks, not timings
+            assert r["ledger_matches"] is True, \
+                "straggler ledger total != fleet idle_j bit-exactly"
+            assert r["split_sums_match"] is True, \
+                "a step's idle_split does not left-fold to its idle_j"
+            assert r["trace_roundtrip"] is True, \
+                "trace reader saw a different event count than written"
+            assert r["spans_match_latency"] is True, \
+                "a request span's e2e_s != its telemetry latency"
+            assert r["telemetry_roundtrip"] is True, \
+                "v4 telemetry did not survive a JSONL round-trip"
+            # observation is free when off: the null recorder buffers
+            # nothing and the run's stats/telemetry are bit-identical
+            assert r["trace_events"] > 0
+            assert r["trace_spans"] == r["n_requests"], \
+                (r["trace_spans"], r["n_requests"])
+            assert r["trace_events_disabled"] == 0, \
+                r["trace_events_disabled"]
+            assert r["stats_bit_identical"] is True, \
+                "enabling the recorder changed the run's stats"
+            assert r["telemetry_bit_identical"] is True, \
+                "enabling the recorder changed the run's telemetry"
+            if not doc["meta"].get("smoke"):
+                assert r["overhead_ratio"] < OBS_MAX_OVERHEAD, \
+                    (r["variant"], r["overhead_ratio"])
 
 
 def run_smoke(sections=None) -> dict:

@@ -309,3 +309,45 @@ print(f"OK: async autoscaled fleet on the diurnal trough — idle energy "
       f"{scaled_stats['r_on_mean']:.2f}/4, "
       f"{scaled_stats['drain_handoffs']} drain handoff(s) with 0 tokens "
       f"recomputed and bit-identical generations")
+
+# ----------------------------------------------------------------------
+# Observability (``repro.obs``): the same diurnal run under the span
+# recorder — every request's lifecycle lands in a Chrome-trace/Perfetto
+# JSON on the deterministic sim clock, and each barrier step's idle
+# joules are decomposed by cause into the straggler ledger.  Both are
+# exact, not approximate: the ledger total folds to the fleet's
+# ``idle_j`` bit-for-bit, and every trace request-span's ``e2e_s``
+# equals the telemetry latency bit-for-bit.
+# ----------------------------------------------------------------------
+import os
+import tempfile
+
+from repro.fleet import SLOSpec
+from repro.obs import SpanRecorder, fold_sum, read_trace, write_trace
+
+rec = SpanRecorder()
+tel = FleetTelemetry(slo=SLOSpec(ttft_s=0.5, tpot_s=0.1))
+traced = FleetServer(cfg, params, async_ec, n_replicas=4,
+                     router="bfio", policy="bfio_h0", mesh=mesh,
+                     telemetry=tel, obs=rec)
+traced.submit_scenario(diurnal)
+traced_stats = traced.run()
+
+ledger = traced.straggler_ledger()
+assert ledger["total_idle_j"] == traced_stats["idle_j"]
+assert all(fold_sum(s["idle_split"]) == s["idle_j"] for s in tel.steps)
+
+trace_path = os.path.join(tempfile.mkdtemp(prefix="serve_cluster_"),
+                          "diurnal.trace")
+write_trace(rec, trace_path)
+seen = read_trace(trace_path)
+lat = {q["rid"]: q["latency"] for q in tel.requests}
+assert set(seen["requests"]) == set(lat)
+assert all(v["e2e_s"] == lat[rid] for rid, v in seen["requests"].items())
+
+print(f"\nOK: traced diurnal run — {rec.n_events} span events across "
+      f"{len(seen['requests'])} requests round-tripped through "
+      f"{trace_path} (every e2e_s bit-equal to the telemetry latency); "
+      f"straggler ledger folds to idle_j = {traced_stats['idle_j']:.3f} J "
+      f"bit-exactly:")
+print(traced.format_straggler_ledger())

@@ -106,6 +106,9 @@ DEFAULT_REGISTRY = Registry(
                 "slot_tokens", "slot_load", "slot_age", "slot_max_new",
                 "slot_eos", "slot_admit_seq", "_admit_seq", "slot_req",
             }),
+            # the obs recorder wiring (`_obs_*`) is set once at
+            # construction and only read on the hot paths
+            attr_prefixes=("_obs_",),
             # submit is a documented pre-step entry point, drain the
             # fleet scale-down one; __init__ declares; everything else
             # must flow from step()/run()
@@ -120,7 +123,7 @@ DEFAULT_REGISTRY = Registry(
                 "_prev_prefix_hits", "_prev_prefix_revived",
                 "_queue", "_live", "_seq",
             }),
-            attr_prefixes=("_snap_",),
+            attr_prefixes=("_snap_", "_obs_"),
             roots=frozenset({"__init__", "step", "run", "submit",
                              "submit_scenario"}),
         ),
@@ -137,7 +140,8 @@ DEFAULT_REGISTRY = Registry(
                 "barrier_compat", "autoscaler",
                 "max_snapshot_age", "record_routes", "route_log",
             }),
-            attr_prefixes=("_ev_", "_rs_", "_as_", "_tick_", "_snap_"),
+            attr_prefixes=("_ev_", "_rs_", "_as_", "_tick_", "_snap_",
+                           "_obs_"),
             roots=frozenset({"__init__", "step", "run", "submit",
                              "submit_scenario"}),
         ),

@@ -46,6 +46,8 @@ from typing import Optional, Union
 import numpy as np
 
 from ..core.metrics import step_imbalance
+from ..obs.ledger import CAUSE_INDEX, N_CAUSES, reconcile_split
+from ..obs.trace import FLEET_TRACK
 from .autoscale import Autoscaler, make_autoscaler
 from .server import FleetServer
 
@@ -114,6 +116,9 @@ class AsyncFleetServer(FleetServer):
         self._tick_tokens = 0
         self._tick_busy = np.zeros(self.R)
         self._tick_completions = 0
+        # per-cause idle within the tick (repro.obs.IDLE_CAUSES order);
+        # reconciled against _tick_idle at the row flush
+        self._tick_cause = np.zeros(N_CAUSES)
         # autoscaler bookkeeping (windowed signals + audit counters)
         self._as_next_decision = (self.autoscaler.interval_s
                                   if self.autoscaler is not None
@@ -156,11 +161,28 @@ class AsyncFleetServer(FleetServer):
         t = max(float(t), self.t_now)
         idle_idx = np.flatnonzero((self._rs_state != COLD)
                                   & ~self._rs_stepping)
+        any_stepping = bool(self._rs_stepping.any())
         for r in idle_idx:
             dt_r = float(t - self._rs_t_acc[r])
             if dt_r > 0:
                 idle = dt_r * float(self._idle_power_vec[r])
                 self.idle_j += idle
+                # single-cause attribution per powered, non-stepping
+                # replica (charged with the same float, right after the
+                # idle_j accumulation — the ledger-total exactness gate)
+                st = int(self._rs_state[r])
+                if st == WARMING:
+                    c = CAUSE_INDEX["warmup"]
+                elif st == DRAINING:
+                    c = CAUSE_INDEX["preempt_swap"]
+                elif self._queue:
+                    c = CAUSE_INDEX["routing_miss"]
+                elif any_stepping:
+                    c = CAUSE_INDEX["decode_tail"]
+                else:
+                    c = CAUSE_INDEX["arrival_gap"]
+                self._obs_ledger.charge_one(idle, c)
+                self._tick_cause[c] += idle
                 self._tick_idle += idle
                 self._rs_on_s[r] += dt_r
                 self._as_win_on += dt_r
@@ -287,6 +309,11 @@ class AsyncFleetServer(FleetServer):
         self._as_drain_tokens_lost += eng.tokens_recomputed - tr0
         self._as_drain_handoffs += len(handoff)
         if handoff:
+            if self._obs_rec.enabled:
+                for req in handoff:
+                    self._obs_rec.point(FLEET_TRACK, req.rid,
+                                        "drain-handoff", self.t_now,
+                                        from_replica=r)
             ids = {id(req) for req in handoff}
             arrival = {}
             still = []
@@ -402,6 +429,9 @@ class AsyncFleetServer(FleetServer):
         self._prev_preemptions += d_preempt
         self._prev_prefix_hits += d_hits
         self._prev_prefix_revived += d_revived
+        # per-tick cause split: reconcile so the row's idle_split folds
+        # to its idle_j bit-exactly (async rows have no gating replica)
+        split = reconcile_split(self._tick_idle, self._tick_cause)
         if self.telemetry is not None:
             self.telemetry.record_step(
                 step=self.steps, t=self.t_now, dt=dt,
@@ -414,7 +444,8 @@ class AsyncFleetServer(FleetServer):
                 replica_count=int((self._rs_state == ACTIVE).sum()),
                 replica_busy=self._tick_busy.copy(),
                 prefix_revived=d_revived,
-                prefix_cached_blocks=int(self._snap_cached.sum()))
+                prefix_cached_blocks=int(self._snap_cached.sum()),
+                gating_replica=-1, idle_split=split)
         info = {"t": self.t_now, "dt": dt, "imbalance": imb,
                 "tokens": self._tick_tokens, "idle_j": self._tick_idle,
                 "waiting": (len(self._pending) + len(self._queue)
@@ -425,6 +456,7 @@ class AsyncFleetServer(FleetServer):
         self._tick_tokens = 0
         self._tick_busy[:] = 0.0
         self._tick_completions = 0
+        self._tick_cause[:] = 0.0
         return info
 
     # ----------------------------------------------------------- driving

@@ -58,6 +58,10 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import make_policy
 from ..core.metrics import step_imbalance
+from ..obs.ledger import (CAUSE_INDEX, N_CAUSES, PHASE_CAUSE,
+                          StragglerLedger, attribute_step_idle,
+                          reconcile_split)
+from ..obs.trace import FLEET_TRACK, NULL_RECORDER
 from ..serving import EngineConfig, ServeRequest, ServingEngine
 from .router import FleetRouter, RouterContext, make_router
 from .telemetry import FleetTelemetry
@@ -88,7 +92,8 @@ class FleetServer:
                  replica_classes: Optional[
                      Sequence[tuple[int, EngineConfig]]] = None,
                  predictor: Union[None, str,
-                                  Callable[[ServeRequest], float]] = None):
+                                  Callable[[ServeRequest], float]] = None,
+                 obs=None):
         if fleet_mode not in ("ref", "vec"):
             raise ValueError(
                 f"fleet_mode must be 'ref' or 'vec', got {fleet_mode!r}")
@@ -109,10 +114,14 @@ class FleetServer:
             ecs = [engine_cfg] * int(n_replicas)
         self.R = len(ecs)
         self.router = make_router(router)
+        # per-request tracing + straggler attribution (repro.obs); the
+        # recorder is shared with every engine (each on its own track)
+        self._obs_rec = obs if obs is not None else NULL_RECORDER
+        self._obs_ledger = StragglerLedger()
         self.engines = [
             ServingEngine(cfg, params, ec, make_policy(policy),
-                          mesh=mesh, drift=drift)
-            for ec in ecs
+                          mesh=mesh, drift=drift, obs=obs, obs_replica=i)
+            for i, ec in enumerate(ecs)
         ]
         self.ec = engine_cfg
         self.telemetry = telemetry
@@ -170,6 +179,10 @@ class FleetServer:
         """Queue a request for release at ``arrival_time`` on the fleet
         clock (0 = immediately)."""
         self.requests.append(req)
+        if self._obs_rec.enabled:
+            self._obs_rec.point(FLEET_TRACK, req.rid, "queued",
+                                float(arrival_time),
+                                n_prompt=len(req.tokens))
         heapq.heappush(self._pending,
                        (float(arrival_time), self._seq, req))
         self._seq += 1
@@ -211,6 +224,18 @@ class FleetServer:
         return np.array([float(self._predict(req))
                          for _, req in self._queue])
 
+    @staticmethod
+    def _req_chain(req: ServeRequest, bs: int, prefix) -> list:
+        """Memoized block-hash chain for a request's full prompt at
+        block size ``bs`` (``ServeRequest.prefix_keys``) — the affinity
+        probe and the engine's admission share one hash walk per prompt
+        per block size (gated by the hash-count regression test)."""
+        chain = req.prefix_keys.get(bs)
+        if chain is None:
+            chain = prefix.keys_for(req.tokens, bs)
+            req.prefix_keys[bs] = chain
+        return chain
+
     def _affinity_matrix(self, eligible=None) -> Optional[np.ndarray]:
         """(R', n) predicted prefix-hit tokens: each candidate's prompt
         head hashed against each routable replica's live PrefixIndex —
@@ -237,7 +262,7 @@ class FleetServer:
             alloc = backend.kv.allocator
             bs = int(backend.block_size)
             if bs not in keys_by_bs:
-                keys_by_bs[bs] = [prefix.keys_for(req.tokens, bs)
+                keys_by_bs[bs] = [self._req_chain(req, bs, prefix)
                                   for _, req in self._queue]
             for i, keys in enumerate(keys_by_bs[bs]):
                 toks = 0
@@ -292,6 +317,9 @@ class FleetServer:
         for (t_arrival, req), g in zip(self._queue, assign):
             g = int(g)
             self.assignments[req.rid] = g
+            if self._obs_rec.enabled:
+                self._obs_rec.point(FLEET_TRACK, req.rid, "routed",
+                                    self.t_now, replica=g)
             rec = {"rid": req.rid, "req": req, "replica": g,
                    "t_arrival": t_arrival, "t_routed": self.t_now,
                    "ttft": None}
@@ -338,6 +366,11 @@ class FleetServer:
                 if req.failed:
                     self.requests_failed += 1
                 latency = self.t_now - rec["t_arrival"]
+                if self._obs_rec.enabled:
+                    self._obs_rec.point(
+                        FLEET_TRACK, req.rid,
+                        "failed" if req.failed else "completed",
+                        self.t_now, replica=rec["replica"])
                 n_gen = len(req.generated)
                 tpot = None
                 if rec["ttft"] is not None and n_gen > 1:
@@ -362,24 +395,48 @@ class FleetServer:
                  de: np.ndarray, any_busy: bool, tokens: int,
                  active: list, waiting: list, preemptions: int,
                  prefix_hits: int, prefix_revived: int,
-                 prefix_cached: int, queued: int) -> dict:
+                 prefix_cached: int, queued: int,
+                 phases: Optional[list] = None) -> dict:
         """Shared barrier accounting: clock/idle/imbalance update,
         request finalization, telemetry row, step info.  Both fleet
         modes call this with identical values, so every derived number
         is computed by identical arithmetic — the bit-identity gate
-        rests on this."""
+        rests on this.
+
+        ``phases`` (per-replica engine step phase, ``"idle"`` for
+        unstepped replicas) drives the straggler attribution: the step's
+        idle joules are split by cause against the gating replica's
+        phase and charged to the ledger with the *same float, in the
+        same order* as ``self.idle_j`` accumulates — so the ledger total
+        matches ``idle_j`` bit-exactly (see :mod:`repro.obs.ledger`)."""
         if any_busy:
             imb = step_imbalance(loads)
             dt = float(dts.max())
             self.imbalance_sum += imb
             idle = float(((dt - dts) * self._idle_power_vec).sum())
+            gating = int(np.argmax(dts))
+            # the replicas the gating replica kept waiting inherit its
+            # phase as cause; a replica that sat fully idle while work
+            # waited anywhere in the fleet is a routing miss instead
+            phase = "idle" if phases is None else phases[gating]
+            causes = np.full(self.R, PHASE_CAUSE.get(
+                phase, CAUSE_INDEX["decode_tail"]), dtype=np.int64)
+            if queued > 0:
+                causes[dts == 0.0] = CAUSE_INDEX["routing_miss"]
+            split = attribute_step_idle(
+                idle, (dt - dts) * self._idle_power_vec, causes)
         else:
             # fleet idle: fast-forward to the next arrival
             imb = 0.0
             dt = max(self._pending[0][0] - self.t_now, 0.0) \
                 if self._pending else 0.0
             idle = float(dt * self._idle_power_vec.sum())
+            gating = -1
+            split = np.zeros(N_CAUSES)
+            split[CAUSE_INDEX["arrival_gap"]] = idle
+            split = reconcile_split(idle, split)
         self.idle_j += idle
+        self._obs_ledger.charge(idle, split, gating)
         self.t_now += dt
         self.steps += 1
         self._finalize_requests()
@@ -399,7 +456,8 @@ class FleetServer:
                 preemptions=d_preempt, prefix_hits=d_hits,
                 replica_count=self.R, replica_busy=dts,
                 prefix_revived=d_revived,
-                prefix_cached_blocks=prefix_cached)
+                prefix_cached_blocks=prefix_cached,
+                gating_replica=gating, idle_split=split)
         return {"t": self.t_now, "dt": dt, "imbalance": imb,
                 "tokens": tokens, "idle_j": idle,
                 "waiting": len(self._pending) + len(self._queue) + queued,
@@ -416,13 +474,15 @@ class FleetServer:
         tokens0 = sum(s.tokens_out for s in snaps)
         dts = np.zeros(self.R)
         de = np.zeros(self.R)
+        phases = ["idle"] * self.R
         any_busy = False
         for r, eng in enumerate(self.engines):
             if not snaps[r].busy:
                 continue
             any_busy = True
             t0, e0 = eng.t_now, eng.energy_j
-            eng.step()
+            info = eng.step()
+            phases[r] = info["phase"]
             dts[r] = eng.t_now - t0
             de[r] = eng.energy_j - e0
         post = [e.load_snapshot() for e in self.engines]
@@ -435,7 +495,7 @@ class FleetServer:
             prefix_hits=sum(s.prefix_hits for s in post),
             prefix_revived=sum(s.prefix_revived for s in post),
             prefix_cached=sum(s.prefix_cached_blocks for s in post),
-            queued=sum(s.waiting for s in post))
+            queued=sum(s.waiting for s in post), phases=phases)
 
     def _step_vec(self) -> dict:
         """Vectorized barrier step: per-replica state lives in cached
@@ -448,11 +508,13 @@ class FleetServer:
         tokens0 = int(self._snap_tokens.sum())
         dts = np.zeros(self.R)
         de = np.zeros(self.R)
+        phases = ["idle"] * self.R
         busy_idx = np.flatnonzero(self._busy_mask)
         for r in busy_idx:
             eng = self.engines[r]
             t0, e0 = eng.t_now, eng.energy_j
-            eng.step()
+            info = eng.step()
+            phases[r] = info["phase"]
             dts[r] = eng.t_now - t0
             de[r] = eng.energy_j - e0
         if busy_idx.size:
@@ -466,7 +528,7 @@ class FleetServer:
             prefix_hits=int(self._snap_hits.sum()),
             prefix_revived=int(self._snap_revived.sum()),
             prefix_cached=int(self._snap_cached.sum()),
-            queued=int(self._snap_waiting.sum()))
+            queued=int(self._snap_waiting.sum()), phases=phases)
 
     def step(self) -> dict:
         """One fleet barrier step: release due arrivals, route, step
@@ -490,6 +552,17 @@ class FleetServer:
         return self.stats()
 
     # ------------------------------------------------------------------
+    def straggler_ledger(self) -> dict:
+        """JSON-native report of the cause-attributed idle ledger (see
+        :class:`repro.obs.ledger.StragglerLedger`); its
+        ``total_idle_j`` equals :attr:`idle_j` bit-exactly."""
+        return self._obs_ledger.report()
+
+    def format_straggler_ledger(self) -> str:
+        """Human-readable ledger table (per-cause joules + gating
+        replicas) — the serve-cluster demo print."""
+        return self._obs_ledger.format()
+
     def stats(self) -> dict:
         rep = [e.stats() for e in self.engines]
         tokens = sum(r["tokens"] for r in rep)

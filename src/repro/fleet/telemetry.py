@@ -41,6 +41,14 @@ Version history:
   :meth:`summary` totals the former and reports the peak of the
   latter, guarded exactly like the v2 fields so v1/v2 files read back
   unchanged.
+* **4** — step records gain ``gating_replica`` (the replica whose step
+  gated the barrier; ``-1`` for arrival-gap troughs and async tick
+  rows) and ``idle_split`` (the step's idle joules decomposed by cause,
+  aligned with :data:`repro.obs.IDLE_CAUSES`; its left-fold sum
+  reproduces the row's ``idle_j`` bit-exactly — see
+  :mod:`repro.obs.ledger`).  :meth:`summary` derives ``idle_by_cause``
+  totals and per-replica ``gating_steps`` counts, guarded exactly like
+  the v2/v3 fields so v1–v3 files read back unchanged.
 """
 from __future__ import annotations
 
@@ -50,11 +58,13 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs.ledger import IDLE_CAUSES
+
 __all__ = ["SLOSpec", "FleetTelemetry", "percentiles",
            "SCHEMA_VERSION", "ACCEPTED_VERSIONS"]
 
-SCHEMA_VERSION = 3
-ACCEPTED_VERSIONS = (1, 2, 3)
+SCHEMA_VERSION = 4
+ACCEPTED_VERSIONS = (1, 2, 3, 4)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +109,8 @@ class FleetTelemetry:
                  "replica_waiting", "cross_imbalance", "energy_j",
                  "idle_j", "tokens", "preemptions", "prefix_hits",
                  "replica_count", "replica_busy",
-                 "prefix_revived", "prefix_cached_blocks")
+                 "prefix_revived", "prefix_cached_blocks",
+                 "gating_replica", "idle_split")
     REQUEST_KEYS = ("rid", "replica", "status", "error", "t_arrival",
                     "t_routed", "ttft", "tpot", "latency", "n_prompt",
                     "n_generated")
@@ -175,6 +186,20 @@ class FleetTelemetry:
         cached = [s.get("prefix_cached_blocks") for s in self.steps]
         if cached and all(x is not None for x in cached):
             out["prefix_cached_blocks_peak"] = int(max(cached))
+        # v4 series (same guard: absent from v1/v2/v3 files)
+        splits = [s.get("idle_split") for s in self.steps]
+        if splits and all(x is not None for x in splits):
+            per = np.asarray(splits, dtype=np.float64).sum(axis=0)
+            out["idle_by_cause"] = {
+                name: float(per[i])
+                for i, name in enumerate(IDLE_CAUSES)}
+        gating = [s.get("gating_replica") for s in self.steps]
+        if gating and all(g is not None for g in gating):
+            counts: dict[str, int] = {}
+            for g in gating:
+                if g >= 0:
+                    counts[str(g)] = counts.get(str(g), 0) + 1
+            out["gating_steps"] = counts
         return _jsonify(out)
 
     # -- JSONL export / import -----------------------------------------

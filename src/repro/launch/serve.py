@@ -75,6 +75,7 @@ from ..fleet import (
 )
 from ..fleet.workloads import SCENARIOS as FLEET_SCENARIOS
 from ..models import init_params, split_params
+from ..obs import SpanRecorder, read_trace, write_trace
 from ..serving import EngineConfig, ServeRequest, ServingEngine
 from .mesh import make_cpu_mesh, make_production_mesh
 
@@ -107,10 +108,12 @@ def serve_fleet(args, cfg, params, engine_cfg, mesh) -> None:
         else args.replicas
     telemetry = FleetTelemetry(
         slo=SLOSpec(ttft_s=args.slo_ttft, tpot_s=args.slo_tpot))
+    recorder = SpanRecorder() if args.trace_out else None
     common = dict(n_replicas=args.replicas, router=router,
                   policy=args.policy, mesh=mesh, telemetry=telemetry,
                   seed=args.seed, fleet_mode=args.fleet_mode,
-                  replica_classes=classes, predictor=args.predictor)
+                  replica_classes=classes, predictor=args.predictor,
+                  obs=recorder)
     if args.async_fleet or args.autoscale:
         autoscaler = None
         if args.autoscale:
@@ -169,6 +172,19 @@ def serve_fleet(args, cfg, params, engine_cfg, mesh) -> None:
         print(f"[fleet] telemetry -> {args.telemetry_out} "
               f"({len(telemetry.steps)} step + "
               f"{len(telemetry.requests)} request records)")
+    if recorder is not None:
+        write_trace(recorder, args.trace_out)
+        seen = read_trace(args.trace_out)   # validate what we wrote
+        print(f"[fleet] trace -> {args.trace_out} "
+              f"({seen['n_points']} points, "
+              f"{len(seen['requests'])} request spans)")
+        ledger = fleet.straggler_ledger()
+        top = max(ledger["by_cause"].items(),
+                  key=lambda kv: kv[1], default=(None, 0.0))
+        print(f"[fleet] straggler ledger: "
+              f"{ledger['total_idle_j']:.1f} J idle attributed over "
+              f"{ledger['charges']} charges; top cause {top[0]} "
+              f"({top[1]:.1f} J)")
 
 
 def main() -> None:
@@ -258,6 +274,11 @@ def main() -> None:
     ap.add_argument("--telemetry-out", default=None,
                     help="write fleet telemetry (per-step, per-request, "
                          "summary) to this JSONL path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request lifecycle spans as Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing); also prints the straggler "
+                         "ledger's idle-energy attribution")
     args = ap.parse_args()
 
     if args.smoke or jax.default_backend() == "cpu":
@@ -279,7 +300,7 @@ def main() -> None:
         prefix_cache=args.prefix_cache)
     if (args.replicas > 1 or args.scenario or args.telemetry_out
             or args.replica_classes or args.pods > 1
-            or args.async_fleet or args.autoscale):
+            or args.async_fleet or args.autoscale or args.trace_out):
         serve_fleet(args, cfg, params, engine_cfg, mesh)
         return
     eng = ServingEngine(cfg, params, engine_cfg,

@@ -184,12 +184,17 @@ class CacheBackend(abc.ABC):
 
     @abc.abstractmethod
     def write_prefill(self, mini_cache, src: np.ndarray, dst: np.ndarray,
-                      tokens: Optional[np.ndarray] = None) -> None:
+                      tokens: Optional[np.ndarray] = None,
+                      chains: Optional[list] = None) -> None:
         """Install prefill output: copy rows ``src`` of ``mini_cache``
         (a ``prefill_fn`` cache over the admitted batch) into slots
         ``dst``.  ``tokens`` (rows aligned with the mini cache) carries
         the prompt token ids so content-addressed backends can dedup
-        shared prefixes; layout-only backends ignore it."""
+        shared prefixes; layout-only backends ignore it.  ``chains``
+        (aligned with ``src`` rows) optionally carries each row's
+        precomputed block-hash chain (``PrefixIndex.keys_for`` output,
+        memoized on the request) so the prompt is hashed once per
+        lifetime, not once per consumer."""
 
     @abc.abstractmethod
     def prefill_chunk(self, toks: np.ndarray, offs: np.ndarray,
@@ -242,11 +247,12 @@ class SlotCacheBackend(CacheBackend):
         self._bytes = int(sum(
             a.nbytes for a in jax.tree.leaves(self.cache)))
 
-    def write_prefill(self, mini_cache, src, dst, tokens=None) -> None:
+    def write_prefill(self, mini_cache, src, dst, tokens=None,
+                      chains=None) -> None:
         """One fused jitted gather/scatter over the whole admitted batch
         and all cache leaves (see :func:`_install_impl`; the old cache is
-        donated).  ``tokens`` is unused (the contiguous layout is not
-        content-addressed)."""
+        donated).  ``tokens``/``chains`` are unused (the contiguous
+        layout is not content-addressed)."""
         self.cache = _INSTALL(self.cache, mini_cache,
                               jnp.asarray(src, jnp.int32),
                               jnp.asarray(dst, jnp.int32))
@@ -381,7 +387,8 @@ class PagedCacheBackend(CacheBackend):
         return out
 
     # -- protocol -------------------------------------------------------
-    def _shared_prefix(self, toks_row: np.ndarray) -> tuple[list, list]:
+    def _shared_prefix(self, toks_row: np.ndarray,
+                       chain: Optional[list] = None) -> tuple[list, list]:
         """Longest leading run of prefix-cache hits for a prompt: returns
         (keys, shared_blocks) where ``keys`` covers every block of the
         prompt (chained content-hash triples) and ``shared_blocks`` is
@@ -391,8 +398,11 @@ class PagedCacheBackend(CacheBackend):
         (LRU recency) and revived when ``admit`` pins it moments later
         (``add_ref`` on a cached block re-pins it atomically; no
         allocation happens in between, so the hit cannot be reclaimed
-        out from under the admit)."""
-        keys = self.prefix.keys_for(toks_row, self.block_size)
+        out from under the admit).  ``chain`` optionally supplies the
+        precomputed ``keys_for`` triples (memoized on the request) so
+        the prompt is not re-hashed per consumer."""
+        keys = chain if chain is not None \
+            else self.prefix.keys_for(toks_row, self.block_size)
         alloc = self.kv.allocator
         shared = []
         for key, parent, span in keys:
@@ -404,7 +414,8 @@ class PagedCacheBackend(CacheBackend):
         self.prefix.note_lookup(len(keys), len(shared))
         return keys, shared
 
-    def write_prefill(self, mini_cache, src, dst, tokens=None) -> None:
+    def write_prefill(self, mini_cache, src, dst, tokens=None,
+                      chains=None) -> None:
         """Scatter the admitted batch's prefill KV into freshly allocated
         blocks: ONE gather + scatter per pool (k and v) for the whole
         batch, indexed block-wise.  With the prefix cache on (and
@@ -418,13 +429,15 @@ class PagedCacheBackend(CacheBackend):
         lens = np.asarray(mini_cache["lengths"])
         bs = self.block_size
         rows, blkpos, blocks = [], [], []
-        for i, s in zip(src, dst):
+        for n, (i, s) in enumerate(zip(src, dst)):
             s = int(s)
             L = int(lens[i])
             keys: list = []
             shared: list = []
             if self.prefix is not None and tokens is not None and L > 0:
-                keys, shared = self._shared_prefix(tokens[int(i), :L])
+                keys, shared = self._shared_prefix(
+                    tokens[int(i), :L],
+                    chain=chains[n] if chains is not None else None)
             self.kv.admit(s, L, shared=tuple(shared))
             bl = self.kv.req_blocks[s]
             for j, (key, parent, span) in enumerate(keys):
@@ -456,7 +469,8 @@ class PagedCacheBackend(CacheBackend):
             vb[:, rows, blkpos].astype(dt))
 
     def seed_chunk_prefix(self, slot: int, toks: np.ndarray,
-                          count: bool = True) -> int:
+                          count: bool = True,
+                          chain: Optional[list] = None) -> int:
         """Chunked-admission prefix hit: pin the longest run of *full*
         indexed blocks matching the prompt's leading content into
         ``slot`` (``add_ref``, copy-free) and return the token count they
@@ -477,7 +491,8 @@ class PagedCacheBackend(CacheBackend):
         if self.prefix is None:
             return 0
         L = len(toks)
-        keys = self.prefix.keys_for(toks, self.block_size)
+        keys = chain if chain is not None \
+            else self.prefix.keys_for(toks, self.block_size)
         alloc = self.kv.allocator
         shared: list[int] = []
         for key, parent, span in keys:
@@ -501,17 +516,21 @@ class PagedCacheBackend(CacheBackend):
         self.kv.adopt_blocks(slot, shared, covered)
         return covered
 
-    def register_chunk_prefix(self, slot: int, toks: np.ndarray) -> None:
+    def register_chunk_prefix(self, slot: int, toks: np.ndarray,
+                              chain: Optional[list] = None) -> None:
         """Index a chunk-prefilled prompt's blocks for later arrivals
         (the synchronous path registers at :meth:`write_prefill`; chunked
         jobs allocate lazily, so registration happens when the prompt
         completes).  Includes the partial tail — a later *synchronous*
-        admission may share it (decode appends into it copy-on-write)."""
+        admission may share it (decode appends into it copy-on-write).
+        ``chain`` optionally supplies the precomputed ``keys_for``
+        triples (memoized on the request)."""
         if self.prefix is None:
             return
         bl = self.kv.req_blocks.get(int(slot), [])
-        for j, (key, parent, span) in enumerate(
-                self.prefix.keys_for(toks, self.block_size)):
+        keys = chain if chain is not None \
+            else self.prefix.keys_for(toks, self.block_size)
+        for j, (key, parent, span) in enumerate(keys):
             if j >= len(bl):
                 break
             self.prefix.register(key, parent, span, bl[j])

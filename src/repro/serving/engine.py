@@ -65,6 +65,7 @@ from ..core.metrics import step_imbalance
 from ..core.policies import Policy, SchedulerContext
 from ..core.workload import DriftModel, drift_for_family
 from ..models import decode_fn, prefill_fn, supports_paged_stack
+from ..obs.trace import NULL_RECORDER
 from .cache_backend import make_cache_backend
 from .preemption import (
     PreemptContext,
@@ -102,6 +103,12 @@ class ServeRequest:
     # KV or recompute bookkeeping, see serving/preemption.py); None once
     # (re-)admitted
     preempted: Optional[PreemptedState] = None
+    # memoized chained content-hash triples of the full prompt, keyed by
+    # block size: the fleet's prefix-affinity probe computes the chain
+    # at routing and admission reuses it instead of re-hashing
+    # (PrefixIndex.keys_for); valid because `tokens` is immutable after
+    # submission
+    prefix_keys: dict = dataclasses.field(default_factory=dict)
 
     @property
     def done(self) -> bool:
@@ -226,7 +233,8 @@ class ServingEngine:
     """Continuous-batching decode engine over G logical workers."""
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
-                 policy: Policy, *, mesh=None, drift: DriftModel = None):
+                 policy: Policy, *, mesh=None, drift: DriftModel = None,
+                 obs=None, obs_replica: int = 0):
         ec = engine_cfg
         if ec.engine_mode not in ("vec", "ref"):
             raise ValueError(
@@ -299,6 +307,11 @@ class ServingEngine:
         self.tokens_swapped = 0      # KV tokens staged host-side
         self.tokens_recomputed = 0   # KV tokens dropped for re-prefill
         self.rng = np.random.default_rng(0)
+        # span recorder (repro.obs): NULL_RECORDER is a no-op, so an
+        # untraced run buffers nothing and stays bit-identical;
+        # obs_replica is this engine's trace track (fleet replica id)
+        self._obs_rec = obs if obs is not None else NULL_RECORDER
+        self._obs_replica = int(obs_replica)
 
         self._decode = _jitted_decode(cfg, mesh)
         self._prefill = _jitted_prefill(cfg, mesh, ec.max_seq_len)
@@ -336,6 +349,9 @@ class ServingEngine:
                     "never be admitted")
         req.t_submit = self.t_now
         req.status = "queued"
+        if self._obs_rec.enabled:
+            self._obs_rec.point(self._obs_replica, req.rid, "queued",
+                                self.t_now, n_prompt=len(req.tokens))
         self.scheduler.submit(req)
 
     def _worker_of(self, slot: int) -> int:
@@ -417,14 +433,34 @@ class ServingEngine:
             return r.preempted.n_blocks
         return self.backend.blocks_for(self._admit_len(r))
 
-    def _admit(self) -> None:
-        """Router step: assign waiting requests to free slots."""
+    def _prefix_chain(self, r: "ServeRequest", toks) -> Optional[list]:
+        """Memoized chained content-hash triples for an admission's
+        token sequence, shared with the fleet's prefix-affinity probe
+        via ``ServeRequest.prefix_keys`` — the probe hashes the prompt
+        at routing and admission reuses the chain instead of re-hashing
+        it.  Only a full untruncated prompt is cacheable (resume
+        sequences and truncations hash different content); those fall
+        back to ``keys_for`` inside the backend (chain=None)."""
+        prefix = getattr(self.backend, "prefix", None)
+        if prefix is None or len(toks) != len(r.tokens):
+            return None
+        bs = int(self.backend.block_size)
+        chain = r.prefix_keys.get(bs)
+        if chain is None:
+            chain = prefix.keys_for(toks, bs)
+            r.prefix_keys[bs] = chain
+        return chain
+
+    def _admit(self) -> tuple[int, int]:
+        """Router step: assign waiting requests to free slots; returns
+        ``(fresh, resumed)`` admission counts (the step-phase signal the
+        straggler attribution classifies barrier slack by)."""
         if not self.wait:
-            return
+            return 0, 0
         counts = self._counts()
         caps = self.B - counts
         if caps.sum() <= 0:
-            return
+            return 0, 0
         loads = self._loads()
         if self.ec.engine_mode == "vec":
             act_idx = self.table.active_indices()
@@ -473,7 +509,7 @@ class ServingEngine:
                         blocks_of=self._blocks_needed)
         to_admit = self.scheduler.admit(ctx, caps, **gate)
         if not to_admit:
-            return
+            return 0, 0
         resumed = [(r, g) for r, g in to_admit
                    if r.preempted is not None
                    and r.preempted.mode == "swap"]
@@ -482,7 +518,7 @@ class ServingEngine:
         if resumed:
             self._resume_swapped(resumed)
         if not fresh:
-            return
+            return 0, len(resumed)
         if self.scheduler.chunked:
             # empty prompts have no chunk work to schedule; the
             # synchronous path already handles them (prefill over an
@@ -495,6 +531,7 @@ class ServingEngine:
                 self._prefill_batch(empty)
         else:
             self._prefill_batch(fresh)
+        return len(fresh), len(resumed)
 
     def _admit_chunked(self, items: list[tuple["ServeRequest", int]]) -> None:
         """Chunked admission: claim slots and register prefill jobs; no
@@ -528,9 +565,18 @@ class ServingEngine:
                 resume_token = int(r.preempted.next_token)
                 resume_length = int(r.preempted.length)
                 r.preempted = None
+                if self._obs_rec.enabled:
+                    self._obs_rec.point(self._obs_replica, r.rid,
+                                        "resumed", self.t_now,
+                                        slot=slot, mode="recompute")
             elif self._paged and self.backend.prefix is not None:
-                done = self.backend.seed_chunk_prefix(slot, toks,
-                                                      count=first_admit)
+                done = self.backend.seed_chunk_prefix(
+                    slot, toks, count=first_admit,
+                    chain=self._prefix_chain(r, toks))
+            if self._obs_rec.enabled and resume_token is None:
+                self._obs_rec.point(self._obs_replica, r.rid,
+                                    "admitted", self.t_now,
+                                    worker=g, slot=slot, seeded=done)
             self.slot_load[slot] = float(done)
             self.table.prefill_left[slot] = len(toks) - done
             self.scheduler.register_job(slot, r, toks, done=done,
@@ -549,6 +595,9 @@ class ServingEngine:
             slot = int(slots[i])
             st = r.preempted
             self.backend.swap_in(slot, st)
+            if self._obs_rec.enabled:
+                self._obs_rec.point(self._obs_replica, r.rid, "resumed",
+                                    self.t_now, slot=slot, mode="swap")
             r.worker, r.slot = g, slot
             r.status = "active"
             self.slot_req[slot] = r
@@ -634,6 +683,10 @@ class ServingEngine:
         r.status = "queued"
         self.scheduler.requeue(r)
         self.preemptions += 1
+        if self._obs_rec.enabled:
+            self._obs_rec.point(self._obs_replica, r.rid, "preempted",
+                                self.t_now, slot=slot,
+                                mode=self.ec.preemption_mode)
 
     def drain(self) -> list:
         """Evict everything this engine holds for fleet-tier re-routing
@@ -681,6 +734,9 @@ class ServingEngine:
         self.table.release(np.asarray([slot]))
         self.backend.release(np.asarray([slot]))
         self.requests_failed += 1
+        if self._obs_rec.enabled:
+            self._obs_rec.point(self._obs_replica, r.rid, "failed",
+                                self.t_now)
 
     def _ensure_decode_capacity(self) -> None:
         """Preempt until the pool can serve this step's decode growth
@@ -760,6 +816,11 @@ class ServingEngine:
         for j, (slot, off, n) in enumerate(plan):
             total += n
             job = self.scheduler.job(slot)
+            if self._obs_rec.enabled:
+                self._obs_rec.point(self._obs_replica,
+                                    self.slot_req[slot].rid,
+                                    "prefill-chunk", self.t_now,
+                                    slot=slot, offset=off, tokens=n)
             finished = self.scheduler.advance(slot, n)
             done = off + n
             self.slot_load[slot] = float(done)
@@ -785,13 +846,19 @@ class ServingEngine:
                     # index the finished prompt's blocks for later
                     # arrivals (sync admissions register at write_prefill;
                     # chunked jobs allocate lazily, so register here)
-                    self.backend.register_chunk_prefix(slot, job.tokens)
+                    self.backend.register_chunk_prefix(
+                        slot, job.tokens,
+                        chain=self._prefix_chain(r, job.tokens))
                 first = int(np.argmax(logits[j]))
                 self.slot_tokens[slot] = first
                 self.slot_age[slot] = 1
                 r.generated.append(first)
                 if np.isnan(r.t_first_token):
                     r.t_first_token = self.t_now
+                    if self._obs_rec.enabled:
+                        self._obs_rec.point(self._obs_replica, r.rid,
+                                            "decode", self.t_now,
+                                            slot=slot)
                 if (len(r.generated) >= r.max_new_tokens
                         or first == r.eos_id):
                     self._finish_at_prefill(slot, r)
@@ -806,6 +873,9 @@ class ServingEngine:
         self.slot_req[slot] = None
         self.table.release(np.asarray([slot]))
         self.backend.release(np.asarray([slot]))
+        if self._obs_rec.enabled:
+            self._obs_rec.point(self._obs_replica, r.rid, "completed",
+                                self.t_now, n_generated=len(r.generated))
 
     def _prefill_batch(self, items: list[tuple["ServeRequest", int]]) -> None:
         """Run prefill for admitted requests and write their cache slots.
@@ -889,19 +959,32 @@ class ServingEngine:
                     # backend re-admits the slot below
                     length_fix.append((slot, int(r.preempted.length)))
                 r.preempted = None
+                if self._obs_rec.enabled:
+                    self._obs_rec.point(self._obs_replica, r.rid,
+                                        "resumed", self.t_now,
+                                        slot=slot, mode="recompute")
                 continue
+            if self._obs_rec.enabled:
+                self._obs_rec.point(self._obs_replica, r.rid,
+                                    "admitted", self.t_now,
+                                    worker=g, slot=slot, seeded=0)
             first_tok = int(first[i])
             self.slot_tokens[slot] = first_tok
             self.slot_age[slot] = 1
             r.generated.append(first_tok)
             if np.isnan(r.t_first_token):
                 r.t_first_token = self.t_now
+                if self._obs_rec.enabled:
+                    self._obs_rec.point(self._obs_replica, r.rid,
+                                        "decode", self.t_now, slot=slot)
             if (len(r.generated) >= r.max_new_tokens
                     or first_tok == r.eos_id):
                 done_slots.append((slot, r))
         if ec.engine_mode == "vec":
+            chains = [self._prefix_chain(r, toks[i, :int(lens[i])])
+                      for i, (r, _) in enumerate(items)]
             self.backend.write_prefill(mini_cache, np.arange(nb), slots,
-                                       tokens=toks)
+                                       tokens=toks, chains=chains)
         else:
             for i in range(nb):
                 self._copy_cache_slot(mini_cache, i, int(slots[i]))
@@ -935,8 +1018,14 @@ class ServingEngine:
     def step(self) -> dict:
         """One barrier-synchronized step: admission, at most
         ``prefill_budget`` chunked-prefill tokens, and one decode token
-        for every active (non-prefilling) request."""
-        self._admit()
+        for every active (non-prefilling) request.
+
+        The returned info dict carries ``phase`` — the dominant work
+        class of the step (``preempt`` > ``prefill`` > ``decode`` >
+        ``idle``) — which the fleet's straggler attribution maps to an
+        idle cause when this replica gates a barrier step."""
+        p0 = self.preemptions
+        fresh, resumed = self._admit()
         chunk_tokens = self._run_chunks() if self.scheduler.chunked else 0
         vec = self.ec.engine_mode == "vec"
         if self._paged:
@@ -972,11 +1061,20 @@ class ServingEngine:
         if self.ec.cache_backend == "paged":
             self.kv_peak_bytes = max(self.kv_peak_bytes,
                                      self.backend.resident_kv_bytes())
+        if self.preemptions > p0 or resumed:
+            phase = "preempt"
+        elif chunk_tokens or fresh:
+            phase = "prefill"
+        elif n_decode:
+            phase = "decode"
+        else:
+            phase = "idle"
         return {"t": self.t_now, "active": n_active,
                 "waiting": len(self.wait), "max_load": lmax,
                 "imbalance": imb, "decoded": n_decode,
                 "prefill_tokens": chunk_tokens,
-                "prefilling": self.scheduler.n_prefilling}
+                "prefilling": self.scheduler.n_prefilling,
+                "phase": phase}
 
     def _decode_step_ref(self, active: list[int]) -> None:
         """Seed decode path: always decode all G*B slots, per-slot loop."""
@@ -994,6 +1092,10 @@ class ServingEngine:
                     or tok == r.eos_id):
                 r.t_finish = self.t_now
                 r.status = "done"
+                if self._obs_rec.enabled:
+                    self._obs_rec.point(self._obs_replica, r.rid,
+                                        "completed", self.t_now,
+                                        n_generated=len(r.generated))
                 self.slot_req[s] = None
                 self.slot_load[s] = 0.0
                 self.table.active[s] = False
@@ -1021,6 +1123,10 @@ class ServingEngine:
                 r = self.slot_req[s]
                 r.t_finish = self.t_now
                 r.status = "done"
+                if self._obs_rec.enabled:
+                    self._obs_rec.point(self._obs_replica, r.rid,
+                                        "completed", self.t_now,
+                                        n_generated=len(r.generated))
                 self.slot_req[s] = None
             self.table.release(done_idx)
             self.backend.release(done_idx)

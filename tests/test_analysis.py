@@ -225,6 +225,22 @@ def test_deleting_drain_release_fails_gate(tmp_path):
     assert "engine.py" in r.stdout
 
 
+def test_undeclared_obs_write_fails_gate(tmp_path):
+    # the `_obs_*` family is declared step-scoped barrier state: a
+    # write from a reporting method (not reachable from the declared
+    # roots) must fail RA301, so observability reads can never mutate
+    # the ledger they report
+    dst = _mutated_src(
+        tmp_path, "repro/fleet/server.py",
+        "        return self._obs_ledger.report()",
+        "        self._obs_ledger = StragglerLedger()\n"
+        "        return self._obs_ledger.report()")
+    r = cli([dst, "--baseline", BASELINE])
+    assert r.returncode == 1
+    assert "RA301" in r.stdout
+    assert "_obs_ledger" in r.stdout
+
+
 def test_vec_only_stat_fails_gate(tmp_path):
     dst = _mutated_src(
         tmp_path, "repro/fleet/server.py",

@@ -377,7 +377,7 @@ class TestTelemetryV2:
                     replica_busy=list(busy))
 
     def test_v2_summary_and_roundtrip(self, tmp_path):
-        assert SCHEMA_VERSION == 3
+        assert SCHEMA_VERSION == 4
         tel = FleetTelemetry()
         for i in range(3):
             tel.record_step(**self._step(i, count=2 - (i == 2)))
@@ -428,11 +428,44 @@ class TestTelemetryV2:
         assert "replica_utilization" not in summ
 
     def test_unknown_version_rejected(self, tmp_path):
-        path = tmp_path / "v4.jsonl"
+        path = tmp_path / "v5.jsonl"
         with open(path, "w") as f:
             f.write(json.dumps(
-                {"kind": "meta", "schema_version": 4,
+                {"kind": "meta", "schema_version": 5,
                  "slo": {"ttft_s": 1.0, "tpot_s": 0.1},
                  "record_steps": True}) + "\n")
         with pytest.raises(ValueError, match="schema_version"):
             FleetTelemetry.read_jsonl(str(path))
+
+    def test_v4_summary_and_roundtrip(self, tmp_path):
+        from repro.obs import IDLE_CAUSES, fold_sum
+        tel = FleetTelemetry()
+        splits = [[0.25, 0.0, 0.0, 0.0, 0.0, 0.0],
+                  [0.0, 0.125, 0.125, 0.0, 0.0, 0.0],
+                  [0.0, 0.0, 0.0, 0.0, 0.0, 0.25]]
+        for i, (g, sp) in enumerate(zip([0, 1, -1], splits)):
+            tel.record_step(**self._step(i), gating_replica=g,
+                            idle_split=sp)
+        summ = tel.summary()
+        assert summ["idle_by_cause"] == {
+            name: v for name, v in zip(
+                IDLE_CAUSES, [0.25, 0.125, 0.125, 0.0, 0.0, 0.25])}
+        # trough rows (gating -1) are excluded from the gating counts
+        assert summ["gating_steps"] == {"0": 1, "1": 1}
+        # each row's split folds back to its idle_j bit-exactly
+        for s in tel.steps:
+            assert fold_sum(s["idle_split"]) == s["idle_j"]
+        path = tmp_path / "v4.jsonl"
+        tel.write_jsonl(str(path))
+        back = FleetTelemetry.read_jsonl(str(path))
+        assert back.summary() == summ
+        for s in back.steps:
+            assert fold_sum(s["idle_split"]) == s["idle_j"]
+
+    def test_v3_shaped_rows_skip_v4_derivations(self):
+        tel = FleetTelemetry()
+        tel.record_step(**self._step(0), prefix_revived=0,
+                        prefix_cached_blocks=1)
+        summ = tel.summary()
+        assert "idle_by_cause" not in summ
+        assert "gating_steps" not in summ

@@ -19,7 +19,7 @@ def test_smoke_schema_and_finite_timings():
     sections = {r["section"] for r in doc2["rows"]}
     assert sections == {"solver", "simulator", "batch", "engine",
                         "engine_paged", "engine_preempt", "fleet",
-                        "fleet_scale", "fleet_async"}
+                        "fleet_scale", "fleet_async", "obs"}
     kinds = {r.get("kind") for r in doc2["rows"]
              if r["section"] == "engine_paged"}
     assert kinds == {"grid", "stall"}
@@ -35,6 +35,12 @@ def test_smoke_schema_and_finite_timings():
     fasync_kinds = {r.get("kind") for r in doc2["rows"]
                     if r["section"] == "fleet_async"}
     assert fasync_kinds == {"compat", "diurnal"}
+    obs_kinds = {r.get("kind") for r in doc2["rows"]
+                 if r["section"] == "obs"}
+    assert obs_kinds == {"obs"}
+    obs_variants = {r.get("variant") for r in doc2["rows"]
+                    if r["section"] == "obs"}
+    assert obs_variants == {"barrier", "async"}
 
 
 def test_sections_filter():
